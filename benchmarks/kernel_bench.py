@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks + structural perf accounting.
+
+Wall times on this CPU container are NOT TPU estimates; the TPU-relevant
+derived quantities are structural: HBM bytes per matmul for the CLAQ
+kernel path vs the dense-bf16 path (the memory-bound decode speedup the
+deployment format buys), and interpret-mode correctness timing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CLAQConfig, quantize_matrix
+from repro.kernels import ops, ref as ref_lib
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def kernel_bench():
+    rows = []
+    rng = np.random.default_rng(0)
+    n, k_dim, m = 512, 512, 64
+    W = jnp.asarray(rng.normal(size=(n, k_dim)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k_dim)).astype(np.float32))
+
+    for bits in (2, 3, 4):
+        qt, _, _ = quantize_matrix(W, None, CLAQConfig(
+            bits=bits, method="kmeans", kmeans_iters=4, gptq_blocksize=128))
+
+        # structural HBM bytes per token for the weight stream:
+        dense_bytes = n * k_dim * 2                       # bf16 weights
+        q_bytes = sum(s.packed.size * 4 + s.codebook.size * 2
+                      for s in qt.stripes)
+        ratio = dense_bytes / q_bytes
+
+        us_ref = _time(jax.jit(lambda a, q=qt: ops.qmatmul(a, q)), x)
+        us_ker = _time(lambda a, q=qt: ops.qmatmul(
+            a, q, use_kernel=True, interpret=True), x)
+        err = float(jnp.max(jnp.abs(
+            ops.qmatmul(x, qt, use_kernel=True, interpret=True)
+            - ref_lib.ref_qmatmul(x, qt))))
+        rows.append((f"kernel/dequant_matmul_{bits}bit_xla", us_ref,
+                     f"weight_bytes_ratio={ratio:.2f}"))
+        rows.append((f"kernel/dequant_matmul_{bits}bit_pallas_interp", us_ker,
+                     f"max_err={err:.2e}"))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def roofline_rows(dryrun_path="experiments/dryrun.json"):
+    """Surface the dry-run roofline table through the benchmark CSV."""
+    import json
+    import os
+    rows = []
+    if not os.path.exists(dryrun_path):
+        print("roofline/missing,0.0,run launch.dryrun first")
+        return rows
+    with open(dryrun_path) as f:
+        results = json.load(f)
+    for key, v in sorted(results.items()):
+        if v.get("status") != "ok":
+            continue
+        r = v["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((f"roofline/{key}", dom * 1e6,
+                     f"bottleneck={r['bottleneck']};"
+                     f"frac={r['roofline_fraction']:.4f};"
+                     f"useful={r['useful_flop_fraction']:.3f}"))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,164 @@
+"""One benchmark function per paper table. Each emits CSV rows
+(name,us_per_call,derived) where us_per_call is the quantization wall time
+and derived is the metric (ppl / accuracy / bits)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import APConfig, CLAQConfig, ORConfig
+
+from . import common
+from .common import emit, perplexity, quantized, recipe, trained_model, \
+    zero_shot_proxy_accuracy
+
+
+def table1_ppl():
+    """Table 1: perplexity by method x bit-width (fp / RTN / GPTQ / CLAQ /
+    CLAQ* fusion)."""
+    cfg, params, hess = trained_model()
+    rows = [("table1/fp16,16bit", 0.0, f"ppl={perplexity(cfg, params):.4f}")]
+    for tag in ("rtn4", "rtn3", "gptq4", "claq4", "gptq3", "claq3",
+                "gptq2", "claq2", "claq2.12", "claq2.24"):
+        hessians = {} if tag.startswith("rtn") else None
+        c, qp, rep, us = quantized(recipe(tag), hessians=hessians)
+        rows.append((f"table1/{tag}", us,
+                     f"ppl={perplexity(c, qp):.4f};bits={rep.mean_effective_bits:.2f}"))
+    emit(rows)
+    return rows
+
+
+def table2_zeroshot():
+    """Table 2: zero-shot proxy accuracy (cloze ranking), fp vs low-bit."""
+    cfg, params, _ = trained_model()
+    rows = [("table2/fp16", 0.0,
+             f"acc={zero_shot_proxy_accuracy(cfg, params):.4f}")]
+    for tag in ("claq4", "gptq2", "claq2.12"):
+        c, qp, rep, us = quantized(recipe(tag))
+        rows.append((f"table2/{tag}", us,
+                     f"acc={zero_shot_proxy_accuracy(c, qp):.4f}"))
+    emit(rows)
+    return rows
+
+
+def table3_ap():
+    """Table 3: Adaptive Precision (Outlier Order) vs MP-dagger
+    (magnitude metric) at matched average bits."""
+    rows = []
+    for target in (2.1, 2.2, 2.5):
+        for metric, tag in (("magnitude_mp", "mp"), ("outlier_order", "ap")):
+            qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                              gptq_blocksize=32,
+                              ap=APConfig(target, 2, 4), metric=metric)
+            c, qp, rep, us = quantized(qcfg)
+            rows.append((f"table3/{tag}_{target}", us,
+                         f"ppl={perplexity(c, qp):.4f};bits={rep.mean_effective_bits:.2f}"))
+    emit(rows)
+    return rows
+
+
+def table4_or():
+    """Table 4: adaptive OR vs fixed per-column outlier keeping."""
+    rows = []
+    for extra in (0.14, 0.28):
+        for (o1, o2, tag) in ((0.10, 0.90, "fix"), (0.28, 0.72, "or")):
+            qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                              gptq_blocksize=32,
+                              orr=ORConfig(extra, o1=o1, o2=o2))
+            c, qp, rep, us = quantized(qcfg)
+            rows.append((f"table4/{tag}_{2 + extra:.2f}", us,
+                         f"ppl={perplexity(c, qp):.4f};bits={rep.mean_effective_bits:.2f}"))
+    emit(rows)
+    return rows
+
+
+def table5_outlier_standard():
+    """Appendix B: outlier standard S sweep at 2.2-bit AP."""
+    rows = []
+    for S in (1, 5, 9, 13, 17):
+        qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                          gptq_blocksize=32, ap=APConfig(2.2, 2, 4),
+                          outlier_standard=float(S))
+        c, qp, rep, us = quantized(qcfg)
+        rows.append((f"table5/S{S}", us, f"ppl={perplexity(c, qp):.4f}"))
+    emit(rows)
+    return rows
+
+
+def table6_or_split():
+    """Appendix C: OR budget split settings 1/2/3."""
+    rows = []
+    for o1, tag in ((0.19, "setting1"), (0.28, "setting2"), (0.37, "setting3")):
+        qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                          gptq_blocksize=32,
+                          orr=ORConfig(0.28, o1=o1, o2=1.0 - o1))
+        c, qp, rep, us = quantized(qcfg)
+        rows.append((f"table6/{tag}", us, f"ppl={perplexity(c, qp):.4f}"))
+    emit(rows)
+    return rows
+
+
+def table7_bit_pairs():
+    """Appendix D: AP candidate pair 2&3 vs 2&4 at 2.1 average bits."""
+    rows = []
+    for p_hi, tag in ((3, "2and3"), (4, "2and4")):
+        qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                          gptq_blocksize=32, ap=APConfig(2.1, 2, p_hi))
+        c, qp, rep, us = quantized(qcfg)
+        rows.append((f"table7/{tag}", us, f"ppl={perplexity(c, qp):.4f}"))
+    emit(rows)
+    return rows
+
+
+def table12_heuristic_search():
+    """Appendix G: heuristic cross-matrix AP search vs plain AP at 2.5."""
+    import jax
+    from repro.core import MatrixInfo, heuristic_ap_search, layer_outlier_ratio
+    from repro.core.search import assignment_to_claq_configs
+    from repro.launch.quantize import quantize_model_params
+
+    cfg, params, hess = trained_model()
+    # plain AP 2.5
+    c, qp, rep, us = quantized(CLAQConfig(
+        bits=2, method="kmeans", kmeans_iters=6, gptq_blocksize=32,
+        ap=APConfig(2.5, 2, 4)))
+    rows = [("table12/plain_ap_2.5", us, f"ppl={perplexity(c, qp):.4f}")]
+
+    # heuristic search: rank matrices by whole-matrix outlier ratio
+    flat = jax.tree_util.tree_flatten_with_path(params["blocks"])[0]
+    mats = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if "kernel" not in name or leaf.ndim != 3:
+            continue
+        for i in range(leaf.shape[0]):
+            mats.append(MatrixInfo(f"{name}[{i}]", leaf.shape[1],
+                                   leaf.shape[2],
+                                   float(layer_outlier_ratio(leaf[i]))))
+    res = heuristic_ap_search(mats, target_bits=2.5)
+    rows.append(("table12/heuristic_search", 0.0,
+                 f"avg_bits={res.avg_bits:.3f};score={res.score:.3f};"
+                 f"n_24={sum(1 for v in res.assignment.values() if v[0] == (2, 4))}"))
+    emit(rows)
+    return rows
+
+
+def table13_calibration():
+    """Appendix H: calibration-set distribution effect (c4like vs wikilike
+    calibration, evaluated on both)."""
+    from repro.data import calibration_set
+    from repro.launch.quantize import calibrate
+
+    cfg, params, _ = trained_model()
+    rows = []
+    for calib_name in ("c4like", "wikilike"):
+        calib = calibration_set(vocab=common.VOCAB, n_segments=16,
+                                seq_len=common.SEQ, name=calib_name)
+        hess = calibrate(params, cfg, calib, batch_size=4)
+        c, qp, rep, us = quantized(recipe("claq3"), hessians=hess)
+        rows.append((f"table13/calib_{calib_name}", us,
+                     f"ppl_c4like={perplexity(c, qp, 'c4like'):.4f};"
+                     f"ppl_wikilike={perplexity(c, qp, 'wikilike'):.4f}"))
+    emit(rows)
+    return rows

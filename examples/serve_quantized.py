@@ -1,0 +1,67 @@
+"""End-to-end driver: train a small LM on the synthetic corpus, CLAQ-
+quantize it to ~2.2 bits (AP+OR fusion), and serve batched requests
+through the continuous-batching engine — the paper's deployment story.
+
+  PYTHONPATH=src python examples/serve_quantized.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import APConfig, CLAQConfig, ORConfig
+from repro.data import DataConfig, SyntheticCorpus, calibration_set
+from repro.launch.quantize import claq_quantize
+from repro.models import api
+from repro.optim import OptimConfig, init_opt_state
+from repro.serve import ServingEngine
+from repro.train import make_train_step
+
+VOCAB, SEQ = 512, 64
+
+# ---- 1. train ---------------------------------------------------------------
+cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=VOCAB,
+                          n_layers=4, d_model=160, n_heads=4, n_kv_heads=4,
+                          head_dim=40, d_ff=448)
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+ocfg = OptimConfig(lr=6e-3, warmup_steps=10, total_steps=200)
+opt = init_opt_state(params, ocfg)
+data = SyntheticCorpus(DataConfig(vocab=VOCAB, seq_len=SEQ, batch=16, seed=0))
+step = jax.jit(make_train_step(cfg, ocfg))
+print("training a small LM on the synthetic corpus ...")
+for s in range(150):
+    params, opt, m = step(params, opt, {"tokens": data.batch_at(s)})
+    if s % 50 == 0:
+        print(f"  step {s:4d} loss {float(m['loss']):.3f}")
+print(f"  final loss {float(m['loss']):.3f}")
+
+# ---- 2. CLAQ PTQ ------------------------------------------------------------
+qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=6, gptq_blocksize=32,
+                  ap=APConfig(2.1, 2, 4), orr=ORConfig(0.13))
+calib = calibration_set(vocab=VOCAB, n_segments=16, seq_len=SEQ)
+t0 = time.time()
+qparams, report = claq_quantize(params, cfg, calib, qcfg)
+print(f"\nCLAQ AP+OR fusion: {report.mean_effective_bits:.2f} bits/weight, "
+      f"{len(report.stats)} matrices, {time.time() - t0:.1f}s")
+
+# ---- 3. serve ---------------------------------------------------------------
+for tag, p in (("fp32", params), ("claq-2.2bit", qparams)):
+    eng = ServingEngine(p, cfg, n_slots=4, max_len=128)
+    prompts = [[1 + i, 2 + i, 3 + i, 4 + i] for i in range(8)]
+    reqs = []
+    t0 = time.time()
+    while prompts or eng.active:
+        while prompts and eng.free:
+            uid = eng.add_request(prompts.pop(0), max_new_tokens=12)
+            reqs.append(eng.active[uid])
+        eng.step()
+    dt = time.time() - t0
+    print(f"[{tag:12s}] served 8 requests x 12 tokens in {dt:.2f}s; "
+          f"sample: {reqs[0].tokens[:8]}")
+
+agree = sum(a.tokens[i] == b.tokens[i]
+            for a, b in zip(reqs[:4], reqs[:4]) for i in range(8))
+print("\nquantized model serves through the identical engine "
+      "(QuantizedTensor leaves dispatch inside dense()).")

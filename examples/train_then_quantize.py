@@ -1,0 +1,76 @@
+"""Train-then-PTQ with fault tolerance: train a small LM for a few hundred
+steps with async checkpointing, simulate a preemption + resume, then
+quantize at several bit-widths and report the perplexity curve.
+
+  PYTHONPATH=src python examples/train_then_quantize.py
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import APConfig, CLAQConfig, ORConfig
+from repro.data import DataConfig, SyntheticCorpus, calibration_set
+from repro.launch.quantize import calibrate, quantize_model_params
+from repro.models import api
+from repro.optim import OptimConfig, init_opt_state
+from repro.train import make_train_step
+
+VOCAB, SEQ = 512, 64
+cfg = dataclasses.replace(get_smoke_config("qwen2_1p5b"), vocab=VOCAB,
+                          n_layers=3, d_model=128, d_ff=352)
+ocfg = OptimConfig(lr=6e-3, warmup_steps=10, total_steps=240)
+data = SyntheticCorpus(DataConfig(vocab=VOCAB, seq_len=SEQ, batch=16, seed=0))
+step = jax.jit(make_train_step(cfg, ocfg, n_microbatches=2))
+
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+opt = init_opt_state(params, ocfg)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    print("training (async checkpoints every 40 steps) ...")
+    for s in range(120):
+        params, opt, m = step(params, opt, {"tokens": data.batch_at(s)})
+        if (s + 1) % 40 == 0:
+            mgr.save(s + 1, {"params": params, "opt": opt}, blocking=False)
+            print(f"  step {s + 1:4d} loss {float(m['loss']):.3f} (ckpt queued)")
+    mgr.wait()
+
+    print("simulating preemption ... restoring newest valid checkpoint")
+    latest = mgr.latest_step()
+    st = mgr.restore(latest, {"params": params, "opt": opt})
+    params, opt = st["params"], st["opt"]
+    for s in range(latest, 200):   # resume exactly where the data cursor was
+        params, opt, m = step(params, opt, {"tokens": data.batch_at(s)})
+    print(f"  resumed from {latest}, final loss {float(m['loss']):.3f}")
+
+# ---- PTQ sweep ---------------------------------------------------------------
+calib = calibration_set(vocab=VOCAB, n_segments=16, seq_len=SEQ)
+hess = calibrate(params, cfg, calib, batch_size=4)
+eval_batch = {"tokens": data.batch_at(9999)}
+
+
+def ppl(p):
+    _, met = jax.jit(lambda pp, b: api.loss_fn(pp, cfg, b))(p, eval_batch)
+    return float(jnp.exp(met["nll"]))
+
+
+print(f"\n{'recipe':28s} {'bits':>6s} {'ppl':>9s}")
+print(f"{'fp32':28s} {'32':>6s} {ppl(params):9.3f}")
+for name, qcfg in [
+    ("CLAQ 4-bit", CLAQConfig(bits=4, method="kmeans", kmeans_iters=6,
+                              gptq_blocksize=32)),
+    ("CLAQ 3-bit", CLAQConfig(bits=3, method="kmeans", kmeans_iters=6,
+                              gptq_blocksize=32)),
+    ("CLAQ 2-bit", CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                              gptq_blocksize=32)),
+    ("CLAQ* 2.24 (AP+OR fusion)",
+     CLAQConfig(bits=2, method="kmeans", kmeans_iters=6, gptq_blocksize=32,
+                ap=APConfig(2.1, 2, 4), orr=ORConfig(0.13))),
+]:
+    qp, rep = quantize_model_params(params, cfg, hess, qcfg)
+    print(f"{name:28s} {rep.mean_effective_bits:6.2f} {ppl(qp):9.3f}")

@@ -1,0 +1,51 @@
+"""Render the EXPERIMENTS.md roofline tables from the dry-run JSONs."""
+import json
+import sys
+
+
+def table(path, mesh="single"):
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, v in sorted(results.items()):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        if v.get("status") == "skipped":
+            rows.append(f"| {arch} | {shape} | skipped | — | — | — | — | — | — |")
+            continue
+        if v.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR | — | — | — | — | — | — |")
+            continue
+        r = v["roofline"]
+        p = v["per_device"]
+        rows.append(
+            f"| {arch} | {shape} | {r['bottleneck']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} "
+            f"| {r['useful_flop_fraction']:.3f} "
+            f"| {r['roofline_fraction']:.4f} "
+            f"| {p['argument_bytes'] / 2**30:.2f} |")
+    head = ("| arch | shape | bottleneck | compute (s) | memory (s) | "
+            "collective (s) | useful-FLOP frac | roofline frac | args GiB/dev |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def multi_pod_check(path):
+    with open(path) as f:
+        results = json.load(f)
+    n_ok = sum(1 for k, v in results.items()
+               if k.endswith("|multi") and v.get("status") == "ok")
+    n_skip = sum(1 for k, v in results.items()
+                 if k.endswith("|multi") and v.get("status") == "skipped")
+    n_err = sum(1 for k, v in results.items()
+                if k.endswith("|multi") and v.get("status") == "error")
+    return n_ok, n_skip, n_err
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.json"
+    print(table(path))
+    print()
+    print("multi-pod:", multi_pod_check(path))

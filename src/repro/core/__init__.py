@@ -1,0 +1,30 @@
+"""CLAQ core: the paper's contribution as a composable JAX library."""
+from .policy import APConfig, CLAQConfig, ORConfig  # noqa: F401
+from .claq import (  # noqa: F401
+    MatrixPlan,
+    QuantStats,
+    plan_matrix,
+    quantize_matrix,
+    quantize_model,
+    default_quantize_predicate,
+)
+from .quantized import QuantStripe, QuantizedTensor  # noqa: F401
+from .kmeans import kmeans_1d, kmeans_columns, dequantize_codes  # noqa: F401
+from .outlier import (  # noqa: F401
+    outlier_ratio,
+    outlier_order,
+    top_fraction_mask,
+    topk_per_column_mask,
+    layer_outlier_ratio,
+)
+from .gptq import (  # noqa: F401
+    HessianState,
+    init_hessian,
+    accumulate_hessian,
+    finalize_hessian,
+    prepare_hinv_cholesky,
+    gptq_quantize_matrix,
+    proxy_loss,
+)
+from .rtn import rtn_quantize_matrix  # noqa: F401
+from .search import MatrixInfo, heuristic_ap_search  # noqa: F401

@@ -1,0 +1,227 @@
+"""Blocked GPTQ (OBS-style) quantize-and-compensate engine with pluggable
+column quantizers (K-Means / uniform), per-column bit-widths (Adaptive
+Precision) and per-column fp16 outlier reservation (OR).
+
+Layout convention follows the paper: W has shape (rows=out_features,
+cols=in_features); the Hessian H = X^T X is (cols, cols) over *input*
+features, and columns are quantized sequentially with lazy blocked error
+compensation exactly as in GPTQ (Frantar et al. 2022):
+
+    U = cholesky(inv(H + damp*I), upper)
+    for each column j (in blocks of `blocksize`):
+        q_j   = Quant(w_j)                # K-Means / uniform, bits_j levels
+        err_j = (w_j - q_j) / U[j, j]
+        W[:, j+1:] -= err_j  U[j, j+1:]   # within block eagerly, rest lazily
+
+Everything is jit-able: the column loop is a `lax.fori_loop`, bit-widths and
+reservation masks are dynamic per column, and the K-Means sub-solver runs on
+static `k_max` slots with a dynamic valid count (kmeans.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kmeans as kmeans_lib
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Hessian plumbing
+# ---------------------------------------------------------------------------
+
+class HessianState(NamedTuple):
+    H: Array          # (in_dim, in_dim) running sum of 2 * x x^T
+    count: Array      # scalar, tokens accumulated
+
+
+def init_hessian(in_dim: int, dtype=jnp.float32) -> HessianState:
+    return HessianState(jnp.zeros((in_dim, in_dim), dtype), jnp.zeros((), jnp.float32))
+
+
+@jax.jit
+def accumulate_hessian(state: HessianState, x: Array) -> HessianState:
+    """x: (..., in_dim) calibration activations feeding this matrix."""
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    return HessianState(state.H + 2.0 * (x2.T @ x2), state.count + x2.shape[0])
+
+
+def finalize_hessian(state: HessianState) -> Array:
+    return state.H / jnp.maximum(state.count, 1.0)
+
+
+def prepare_hinv_cholesky(H: Array, percdamp: float = 0.01) -> Array:
+    """GPTQ's preconditioner: U = cholesky(inv(H_damped), upper).
+
+    Dead input dims (zero diag) get their diagonal set to 1 (their weights
+    are then quantized without compensation, as in reference GPTQ).
+    """
+    d = jnp.diag(H)
+    dead = d <= 0.0
+    H = H + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    damp = percdamp * jnp.mean(jnp.where(dead, 0.0, d))
+    Hd = H + damp * jnp.eye(H.shape[0], dtype=H.dtype)
+    L = jnp.linalg.cholesky(Hd)
+    Hinv = jax.scipy.linalg.cho_solve((L, True), jnp.eye(H.shape[0], dtype=H.dtype))
+    Hinv = (Hinv + Hinv.T) * 0.5
+    # Upper Cholesky factor: Hinv = U^T U with U = L^T (L the lower factor).
+    return jnp.linalg.cholesky(Hinv).T
+
+
+def proxy_loss(W: Array, Q: Array, H: Array) -> Array:
+    """Calibration-set quantization objective tr((W-Q) H (W-Q)^T) / rows."""
+    D = (W - Q).astype(jnp.float32)
+    return jnp.einsum("ri,ij,rj->", D, H.astype(jnp.float32), D) / W.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Column quantizers
+# ---------------------------------------------------------------------------
+
+def _uniform_codebook(w: Array, k_max: int, k_valid: Array, weight: Array) -> Array:
+    """Asymmetric min-max uniform grid over the non-reserved entries
+    (== GPTQ's per-column asymmetric quantizer, expressed as a codebook)."""
+    big = jnp.float32(3.4e38)
+    lo = jnp.min(jnp.where(weight > 0, w, big))
+    hi = jnp.max(jnp.where(weight > 0, w, -big))
+    lo = jnp.minimum(lo, hi)  # guard fully-reserved columns
+    slot = jnp.arange(k_max, dtype=jnp.float32)
+    denom = jnp.maximum(k_valid.astype(jnp.float32) - 1.0, 1.0)
+    cb = lo + (hi - lo) * slot / denom
+    return jnp.where(jnp.arange(k_max) < k_valid, cb, jnp.inf)
+
+
+def _column_codebook(
+    w: Array, k_max: int, k_valid: Array, weight: Array,
+    method: str, kmeans_iters: int, axis_name: Optional[str] = None,
+) -> Array:
+    if axis_name is not None:
+        # Row-sharded quantization (shard_map): one column is tiny, so gather
+        # it whole — every shard then fits the *identical* codebook (exact
+        # parity with the unsharded path), while the O(rows*cols) GPTQ
+        # updates stay sharded.  (kmeans_1d also supports psum'd statistics
+        # via axis_name for the fully-distributed variant.)
+        w = jax.lax.all_gather(w, axis_name, tiled=True)
+        weight = jax.lax.all_gather(weight, axis_name, tiled=True)
+    if method == "kmeans":
+        cb, _ = kmeans_lib.kmeans_1d(
+            w, k_max=k_max, k_valid=k_valid, iters=kmeans_iters, weight=weight)
+        return cb
+    elif method == "uniform":
+        return _uniform_codebook(w, k_max, k_valid, weight)
+    raise ValueError(f"unknown method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# The blocked GPTQ loop
+# ---------------------------------------------------------------------------
+
+class QuantizeResult(NamedTuple):
+    Q: Array           # (rows, cols) dequantized (reserved entries at fp value)
+    codes: Array       # (rows, cols) int32 centroid indices
+    codebooks: Array   # (cols, k_max) f32, +inf in invalid slots
+    reserved: Array    # (rows, cols) bool — fp16-reserved entries
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_max", "blocksize", "method", "kmeans_iters", "codebook_mode", "axis_name"),
+)
+def gptq_quantize_matrix(
+    W: Array,
+    U: Array,
+    column_bits: Array,
+    reserved_mask: Array,
+    *,
+    k_max: int,
+    blocksize: int = 128,
+    method: str = "kmeans",
+    kmeans_iters: int = 10,
+    codebook_mode: str = "live",
+    frozen_codebooks: Optional[Array] = None,
+    axis_name: Optional[str] = None,
+) -> QuantizeResult:
+    """Quantize W (rows, cols) column-by-column with OBS compensation.
+
+    Args:
+      U: upper-triangular preconditioner from ``prepare_hinv_cholesky``.
+      column_bits: (cols,) int — per-column bit-width (AP); k_valid = 2**bits.
+      reserved_mask: (rows, cols) bool — entries kept in fp16 (OR). Reserved
+        entries contribute zero quantization error and are excluded from
+        codebook fitting.
+      codebook_mode: 'live' refits the codebook on the GPTQ-compensated
+        column at quantization time (paper-faithful); 'frozen' uses
+        ``frozen_codebooks`` computed from the original weights (fast mode).
+    """
+    rows, cols = W.shape
+    assert cols % blocksize == 0, "pad columns to a multiple of blocksize"
+    nblocks = cols // blocksize
+    W = W.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+
+    if frozen_codebooks is None:
+        frozen_codebooks = jnp.full((cols, k_max), jnp.inf, jnp.float32)
+
+    def quant_column(w, j):
+        kv = (2 ** column_bits[j]).astype(jnp.int32)
+        rmask = reserved_mask[:, j]
+        weight = jnp.where(rmask, 0.0, 1.0)
+        if codebook_mode == "frozen":
+            cb = frozen_codebooks[j]
+        else:
+            cb = _column_codebook(w, k_max, kv, weight, method, kmeans_iters,
+                                  axis_name=axis_name)
+        codes = kmeans_lib._assign(w, cb)
+        safe = jnp.where(jnp.isfinite(cb), cb, 0.0)
+        q = jnp.where(rmask, w, safe[codes])
+        return q, codes, cb
+
+    def block_body(b, carry):
+        W, codes_all, cb_all = carry
+        j0 = b * blocksize
+        Wb = jax.lax.dynamic_slice(W, (0, j0), (rows, blocksize))
+        Ub = jax.lax.dynamic_slice(U, (j0, j0), (blocksize, blocksize))
+
+        def col_body(i, inner):
+            Wb, Qb, Eb, codes_b, cb_b = inner
+            w = Wb[:, i]
+            q, codes, cb = quant_column(w, j0 + i)
+            d = jnp.maximum(Ub[i, i], 1e-12)  # Cholesky diag is positive
+            err = (w - q) / d
+            upd_mask = (jnp.arange(blocksize) > i).astype(jnp.float32)
+            Wb = Wb - jnp.outer(err, Ub[i] * upd_mask)
+            Qb = Qb.at[:, i].set(q)
+            Eb = Eb.at[:, i].set(err)
+            codes_b = codes_b.at[:, i].set(codes)
+            cb_b = cb_b.at[i].set(cb)
+            return (Wb, Qb, Eb, codes_b, cb_b)
+
+        init = (
+            Wb,
+            jnp.zeros((rows, blocksize), jnp.float32),
+            jnp.zeros((rows, blocksize), jnp.float32),
+            jnp.zeros((rows, blocksize), jnp.int32),
+            jnp.full((blocksize, k_max), jnp.inf, jnp.float32),
+        )
+        _, Qb, Eb, codes_b, cb_b = jax.lax.fori_loop(0, blocksize, col_body, init)
+
+        # Lazy update of all later columns: W[:, j0+B:] -= Eb @ U[j0:j0+B, j0+B:]
+        Uband = jax.lax.dynamic_slice(U, (j0, 0), (blocksize, cols))
+        later = (jnp.arange(cols) >= j0 + blocksize).astype(jnp.float32)
+        W = W - Eb @ (Uband * later[None, :])
+        W = jax.lax.dynamic_update_slice(W, Qb, (0, j0))
+        codes_all = jax.lax.dynamic_update_slice(codes_all, codes_b, (0, j0))
+        cb_all = jax.lax.dynamic_update_slice(cb_all, cb_b, (j0, 0))
+        return (W, codes_all, cb_all)
+
+    init = (
+        W,
+        jnp.zeros((rows, cols), jnp.int32),
+        jnp.full((cols, k_max), jnp.inf, jnp.float32),
+    )
+    Wq, codes, cbs = jax.lax.fori_loop(0, nblocks, block_body, init)
+    return QuantizeResult(Q=Wq, codes=codes, codebooks=cbs, reserved=reserved_mask)

@@ -1,0 +1,159 @@
+"""1-D K-Means codebook generation (paper §3.1).
+
+The paper uses scikit-learn-intelex K-Means on each column of a weight
+matrix.  Here it is re-built as a fully `jit`-able, deterministic JAX
+routine so it can run (a) inside the blocked GPTQ loop, (b) vmapped over
+all columns at once for the fast "frozen codebook" mode, and (c) under
+`shard_map` with `psum`'d sufficient statistics when the matrix rows are
+sharded across the mesh.
+
+Design choices vs sklearn:
+  * init = mid-quantiles of the sorted column (deterministic, no RNG, and
+    for 1-D data quantile init is within a small factor of optimal — Lloyd
+    then converges in a handful of iterations);
+  * fixed iteration count (static shapes for jit) instead of tol-based
+    stopping;
+  * supports a *dynamic* number of valid centroids `k_valid <= k_max`
+    (needed by Adaptive Precision where column bit-width varies at trace
+    time) by parking invalid centroids at +inf;
+  * supports per-element weights (weight 0 = element excluded, used by
+    Outlier Reservation so fp16-reserved entries don't drag centroids).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _quantile_init(x_sorted: Array, k_max: int, k_valid: Array) -> Array:
+    """Centroid init at mid-quantiles of the sorted data.
+
+    Invalid slots (index >= k_valid) are set to +inf so they are never the
+    nearest centroid and never receive assignments.
+    """
+    n = x_sorted.shape[0]
+    slot = jnp.arange(k_max)
+    pos = (slot.astype(jnp.float32) + 0.5) / jnp.maximum(k_valid, 1).astype(jnp.float32)
+    idx = jnp.clip((pos * n).astype(jnp.int32), 0, n - 1)
+    c = x_sorted[idx]
+    return jnp.where(slot < k_valid, c, jnp.inf)
+
+
+def _assign(x: Array, centroids: Array) -> Array:
+    """Nearest-centroid assignment; +inf centroids are never selected."""
+    d = jnp.abs(x[:, None] - centroids[None, :])
+    # |x - inf| = inf, but guard NaN (inf - inf) just in case.
+    d = jnp.where(jnp.isnan(d), jnp.inf, d)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def _lloyd_stats(x: Array, w: Array, assign: Array, k_max: int):
+    """Per-cluster weighted sums and counts (the psum-able statistics)."""
+    onehot = jax.nn.one_hot(assign, k_max, dtype=x.dtype) * w[:, None]
+    sums = onehot.T @ x
+    counts = onehot.sum(axis=0)
+    return sums, counts
+
+
+@functools.partial(jax.jit, static_argnames=("k_max", "iters"))
+def kmeans_1d(
+    x: Array,
+    k_max: int,
+    k_valid: Array | int | None = None,
+    iters: int = 10,
+    weight: Optional[Array] = None,
+    axis_name: Optional[str] = None,
+):
+    """1-D K-Means.
+
+    Args:
+      x: (n,) float values of one weight-matrix column (possibly a row-shard
+         when ``axis_name`` is set).
+      k_max: static maximum number of centroids (= 2**p_hi for AP).
+      k_valid: dynamic number of active centroids (<= k_max). None => k_max.
+      iters: Lloyd iterations (static).
+      weight: optional (n,) weights; 0 excludes an element (OR reservation).
+      axis_name: if set, sufficient statistics are ``psum``'d over this mesh
+         axis (rows of the matrix sharded across devices) — the distributed
+         CLAQ quantizer (DESIGN.md §4).
+
+    Returns:
+      centroids: (k_max,) — sorted ascending over valid slots; invalid slots
+        hold +inf (callers mask with ``slot < k_valid``).
+      codes: (n,) int32 nearest-centroid assignment.
+    """
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    if k_valid is None:
+        k_valid = k_max
+    k_valid = jnp.asarray(k_valid, jnp.int32)
+    w = jnp.ones((n,), jnp.float32) if weight is None else weight.astype(jnp.float32)
+
+    # Init from quantiles of the *weighted-included* values: push excluded
+    # elements to the median so they don't stretch the init range.
+    med = jnp.median(x)
+    x_incl = jnp.where(w > 0, x, med)
+    c = _quantile_init(jnp.sort(x_incl), k_max, k_valid)
+
+    def step(c, _):
+        a = _assign(x, c)
+        sums, counts = _lloyd_stats(x, w, a, k_max)
+        if axis_name is not None:
+            sums = jax.lax.psum(sums, axis_name)
+            counts = jax.lax.psum(counts, axis_name)
+        newc = jnp.where(counts > 0, sums / jnp.maximum(counts, 1e-9), c)
+        slot = jnp.arange(k_max)
+        newc = jnp.where(slot < k_valid, newc, jnp.inf)
+        return newc, None
+
+    c, _ = jax.lax.scan(step, c, None, length=iters)
+    # Canonical form: ascending valid centroids (inf slots sort to the end).
+    c = jnp.sort(c)
+    codes = _assign(x, c)
+    return c, codes
+
+
+def kmeans_columns(
+    W: Array,
+    k_max: int,
+    k_valid: Array | int | None = None,
+    iters: int = 10,
+    weight: Optional[Array] = None,
+):
+    """Vectorized per-column K-Means over a (rows, cols) matrix.
+
+    ``k_valid`` may be a scalar or a (cols,) vector (Adaptive Precision).
+    Returns (codebooks (cols, k_max), codes (rows, cols)).
+    """
+    rows, cols = W.shape
+    if k_valid is None:
+        k_valid = jnp.full((cols,), k_max, jnp.int32)
+    k_valid = jnp.broadcast_to(jnp.asarray(k_valid, jnp.int32), (cols,))
+    if weight is None:
+        weight = jnp.ones_like(W, dtype=jnp.float32)
+
+    def one(col, kv, wcol):
+        return kmeans_1d(col, k_max=k_max, k_valid=kv, iters=iters, weight=wcol)
+
+    cb, codes = jax.vmap(one, in_axes=(1, 0, 1), out_axes=(0, 1))(W, k_valid, weight)
+    return cb, codes
+
+
+def dequantize_codes(codebooks: Array, codes: Array) -> Array:
+    """codes (rows, cols) + codebooks (cols, k) -> values (rows, cols)."""
+    safe_cb = jnp.where(jnp.isfinite(codebooks), codebooks, 0.0)
+    return jnp.take_along_axis(safe_cb.T, codes, axis=0)
+
+
+def inertia(x: Array, centroids: Array, weight: Optional[Array] = None) -> Array:
+    """Weighted within-cluster sum of squares (quality metric for tests)."""
+    codes = _assign(x, centroids)
+    safe = jnp.where(jnp.isfinite(centroids), centroids, 0.0)
+    err = x - safe[codes]
+    w = jnp.ones_like(x) if weight is None else weight
+    return jnp.sum(w * err * err)

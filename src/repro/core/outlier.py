@@ -1,0 +1,67 @@
+"""Outlier Order — the column-wise quantization-sensitivity metric (paper §3.2).
+
+R_j = |{ i : |W_ij| > S * mean(|W|) }| / rows            (paper Eq. 3)
+
+S is the "outlier standard" (paper Appendix B finds S=13 best; we default to
+that).  The ranking of R_j ("Outlier Order") drives both Adaptive Precision
+and Outlier Reservation.  Computed once per matrix, O(numel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_OUTLIER_STANDARD = 13.0
+
+
+def outlier_ratio(W: Array, standard: float = DEFAULT_OUTLIER_STANDARD) -> Array:
+    """Per-column outlier ratio R_j (Eq. 3). W: (rows, cols) -> (cols,)."""
+    absW = jnp.abs(W.astype(jnp.float32))
+    thresh = standard * jnp.mean(absW)
+    return jnp.mean((absW > thresh).astype(jnp.float32), axis=0)
+
+
+def outlier_order(R: Array) -> Array:
+    """Columns sorted by descending sensitivity. Ties broken by column index
+    (stable) so allocations are deterministic."""
+    return jnp.argsort(-R, stable=True).astype(jnp.int32)
+
+
+def top_fraction_mask(R: Array, fraction: float) -> Array:
+    """Boolean mask of the ceil(fraction*cols) most sensitive columns.
+
+    Implemented by rank (argsort of argsort) rather than a value threshold so
+    the *count* is exact even with ties — the bit-budget accounting depends
+    on exact counts (paper's T_AP / T_OR thresholds are defined by count).
+    """
+    cols = R.shape[0]
+    n_top = int(round(fraction * cols))
+    order = outlier_order(R)
+    rank = jnp.zeros((cols,), jnp.int32).at[order].set(jnp.arange(cols, dtype=jnp.int32))
+    return rank < n_top
+
+
+def topk_per_column_mask(W: Array, counts: Array) -> Array:
+    """Boolean (rows, cols) mask of the `counts[j]` largest-|.| entries per column.
+
+    Used by Outlier Reservation: the same number of largest-magnitude
+    parameters is reserved in each column of a sensitivity class (§3.4 —
+    "the same number of the largest and smallest parameters are reserved").
+    `counts` is a (cols,) int vector (dynamic), mask is rank-based.
+    """
+    absW = jnp.abs(W)
+    # rank 0 = largest magnitude in its column
+    order = jnp.argsort(-absW, axis=0, stable=True)
+    rank = jnp.zeros_like(order).at[order, jnp.arange(W.shape[1])[None, :]].set(
+        jnp.arange(W.shape[0], dtype=order.dtype)[:, None]
+    )
+    return rank < counts[None, :].astype(rank.dtype)
+
+
+def layer_outlier_ratio(W: Array, standard: float = DEFAULT_OUTLIER_STANDARD) -> Array:
+    """Whole-matrix outlier ratio (Appendix A / G: matrix-level ranking)."""
+    absW = jnp.abs(W.astype(jnp.float32))
+    thresh = standard * jnp.mean(absW)
+    return jnp.mean((absW > thresh).astype(jnp.float32))

@@ -1,0 +1,151 @@
+"""QuantizedTensor — the deployable storage format produced by CLAQ.
+
+Layout (DESIGN.md §4, "AP inside one kernel, no ragged tiles"):
+
+  * Columns are *permuted* so each Adaptive-Precision bit-class occupies a
+    contiguous stripe; each stripe is a dense (packed codes, codebooks) pair
+    with a single static bit-width — uniform tiles for the Pallas kernel.
+  * Outlier Reservation is stored structurally: per column, a fixed number
+    of (row index, fp value) pairs — dense (k_max, cols) planes with a valid
+    count per column.  No CSR, no scatter at inference.
+  * ``col_perm[p]`` = original column index stored at permuted position p.
+
+The object is a registered pytree, so it can sit inside a params tree and
+flow through jit/pjit; static metadata (shape, bit-widths) lives in the
+treedef.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import packing
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantStripe:
+    packed: Array     # (packed_rows, n_cols_stripe) uint32
+    codebook: Array   # (n_cols_stripe, 2**bits) float32 (invalid slots = 0)
+    bits: int         # static
+
+    @property
+    def n_cols(self) -> int:
+        return self.packed.shape[1]
+
+
+jax.tree_util.register_dataclass(
+    QuantStripe, data_fields=["packed", "codebook"], meta_fields=["bits"])
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Quantized (rows, cols) matrix in paper layout (rows=out, cols=in)."""
+    stripes: Tuple[QuantStripe, ...]
+    col_perm: Array    # (cols,) int32 — original col index per permuted slot
+    out_idx: Array     # (k_out_max, cols) int32 — row indices, ORIGINAL col order
+    out_val: Array     # (k_out_max, cols) float32
+    out_count: Array   # (cols,) int32 — valid reserved entries per column
+    shape: Tuple[int, int]   # static (rows, cols)
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    def dequantize(self, dtype=jnp.float32) -> Array:
+        """Reference dequantization — the jnp oracle the kernels test against."""
+        rows, cols = self.shape
+        parts = []
+        for s in self.stripes:
+            codes = packing.unpack_codes(s.packed, s.bits, rows)
+            parts.append(jnp.take_along_axis(s.codebook.T.astype(jnp.float32),
+                                             codes, axis=0))
+        Wp = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        # Un-permute columns: position p holds original column col_perm[p].
+        W = jnp.zeros((rows, cols), jnp.float32).at[:, self.col_perm].set(Wp)
+        if self.out_idx.shape[0] > 0:
+            k = self.out_idx.shape[0]
+            valid = jnp.arange(k)[:, None] < self.out_count[None, :]
+            colj = jnp.broadcast_to(jnp.arange(cols)[None, :], self.out_idx.shape)
+            safe_idx = jnp.where(valid, self.out_idx, rows)  # OOB -> dropped
+            W = W.at[safe_idx, colj].set(self.out_val, mode="drop")
+        return W.astype(dtype)
+
+    def effective_bits(self, include_codebooks: bool = False) -> float:
+        rows, cols = self.shape
+        code_bits = sum(packing.storage_bits_per_element(s.bits) * rows * s.n_cols
+                        for s in self.stripes)
+        outlier_bits = float(np.sum(np.asarray(self.out_count))) * 32.0
+        total = code_bits + outlier_bits
+        if include_codebooks:
+            total += sum(s.codebook.shape[0] * s.codebook.shape[1] * 16.0
+                         for s in self.stripes)
+        return total / (rows * cols)
+
+
+jax.tree_util.register_dataclass(
+    QuantizedTensor,
+    data_fields=["stripes", "col_perm", "out_idx", "out_val", "out_count"],
+    meta_fields=["shape"],
+)
+
+
+def build_quantized_tensor(
+    codes: Array,              # (rows, cols) int32 (original column order)
+    codebooks: Array,          # (cols, k_max) f32 with +inf invalid slots
+    column_bits: np.ndarray,   # (cols,) host ints
+    reserve_counts: np.ndarray,  # (cols,) host ints
+    Q: Array,                  # (rows, cols) final dequantized (for outlier values)
+    reserved_mask: Array,      # (rows, cols) bool
+) -> QuantizedTensor:
+    """Assemble the deployment format from a gptq.QuantizeResult."""
+    rows, cols = codes.shape
+    column_bits = np.asarray(column_bits)
+    reserve_counts = np.asarray(reserve_counts)
+
+    # --- stripes (stable order: ascending bit-width, original index within) --
+    stripes = []
+    perm_parts = []
+    for b in sorted(set(int(x) for x in column_bits.tolist())):
+        idx = np.nonzero(column_bits == b)[0].astype(np.int32)
+        perm_parts.append(idx)
+        sub_codes = jnp.take(codes, jnp.asarray(idx), axis=1)
+        sub_cb = jnp.take(codebooks, jnp.asarray(idx), axis=0)[:, : 2 ** b]
+        sub_cb = jnp.where(jnp.isfinite(sub_cb), sub_cb, 0.0).astype(jnp.float32)
+        stripes.append(QuantStripe(
+            packed=packing.pack_codes(sub_codes, b),
+            codebook=sub_cb,
+            bits=b,
+        ))
+    col_perm = jnp.asarray(np.concatenate(perm_parts), jnp.int32)
+
+    # --- structured outliers (original column order) -------------------------
+    k_max = int(reserve_counts.max()) if reserve_counts.size else 0
+    if k_max > 0:
+        # Rank rows per column by reservation: reserved entries are exactly
+        # the top-count magnitude entries, so sort the mask (desc) to get
+        # their row indices in the first `count` slots.
+        order = jnp.argsort(-reserved_mask.astype(jnp.int32), axis=0, stable=True)
+        out_idx = order[:k_max].astype(jnp.int32)
+        colj = jnp.broadcast_to(jnp.arange(cols)[None, :], out_idx.shape)
+        out_val = Q[out_idx, colj].astype(jnp.float32)
+        out_count = jnp.asarray(reserve_counts, jnp.int32)
+    else:
+        out_idx = jnp.zeros((0, cols), jnp.int32)
+        out_val = jnp.zeros((0, cols), jnp.float32)
+        out_count = jnp.zeros((cols,), jnp.int32)
+
+    return QuantizedTensor(
+        stripes=tuple(stripes), col_perm=col_perm,
+        out_idx=out_idx, out_val=out_val, out_count=out_count,
+        shape=(rows, cols),
+    )

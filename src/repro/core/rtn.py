@@ -1,0 +1,55 @@
+"""Round-To-Nearest baselines (no GPTQ error compensation).
+
+Two codebook flavours so the paper's ablation axes separate cleanly:
+  * 'uniform'  — per-column asymmetric min-max grid (the classic RTN baseline
+                 in Table 1);
+  * 'kmeans'   — CLAQ's codebooks *without* compensation (isolates the value
+                 of K-Means centroids from the value of OBS updates).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kmeans as kmeans_lib
+
+Array = jax.Array
+
+
+def rtn_quantize_matrix(
+    W: Array,
+    bits: int,
+    method: str = "uniform",
+    kmeans_iters: int = 10,
+    reserved_mask: Optional[Array] = None,
+):
+    """Quantize all columns independently. Returns (Q, codes, codebooks)."""
+    W = W.astype(jnp.float32)
+    rows, cols = W.shape
+    k = 2 ** bits
+    weight = None
+    if reserved_mask is not None:
+        weight = jnp.where(reserved_mask, 0.0, 1.0)
+
+    if method == "kmeans":
+        cbs, codes = kmeans_lib.kmeans_columns(W, k_max=k, iters=kmeans_iters,
+                                               weight=weight)
+    elif method == "uniform":
+        wsel = W if weight is None else jnp.where(weight > 0, W, jnp.nan)
+        lo = jnp.nanmin(wsel, axis=0)
+        hi = jnp.nanmax(wsel, axis=0)
+        lo = jnp.where(jnp.isnan(lo), 0.0, lo)
+        hi = jnp.where(jnp.isnan(hi), 0.0, hi)
+        grid = lo[:, None] + (hi - lo)[:, None] * (
+            jnp.arange(k, dtype=jnp.float32)[None, :] / max(k - 1, 1))
+        cbs = grid  # (cols, k)
+        codes = jax.vmap(kmeans_lib._assign, in_axes=(1, 0), out_axes=1)(W, cbs)
+    else:
+        raise ValueError(method)
+
+    Q = kmeans_lib.dequantize_codes(cbs, codes)
+    if reserved_mask is not None:
+        Q = jnp.where(reserved_mask, W, Q)
+    return Q, codes, cbs

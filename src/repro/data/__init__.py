@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticCorpus, synth_batch, calibration_set  # noqa: F401

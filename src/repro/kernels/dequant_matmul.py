@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: fused CLAQ dequant GEMM with outlier-reservation epilogue.
+
+Computes  y = x @ W^T  where W (N=out, K=in) is stored as:
+  * packed code planes (uint32 words along the N axis, one stream/column),
+  * a per-column codebook (K, 2**bits),
+  * structured outliers: up to `k_out` (row-index, fp-value) pairs per
+    column overriding the dequantized value (Outlier Reservation, §3.4).
+
+TPU adaptation (DESIGN.md §4):
+  * codes unpack with shift/mask on the VPU; centroid lookup is done as a
+    2**bits-way select-accumulate (no gather — codebooks are <=16 entries,
+    so a select chain beats any gather on TPU and vectorizes across the
+    whole tile);
+  * outliers apply inside the dequant epilogue as `k_out` masked selects
+    against the tile's global row ids — no scatter, shape-static;
+  * the weight tile feeds the MXU directly from VMEM; full-width W never
+    exists in HBM.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the (bm, bn) f32 output block stays
+resident in VMEM across the K sweep (revisited accumulation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _unpack_tile(words, width: int, bn: int):
+    """(bn//cpw, bk) uint32 words -> (bn, bk) int32 codes of `width` bits."""
+    cpw = 32 // width
+    mask = jnp.uint32((1 << width) - 1)
+    rep = jnp.repeat(words, cpw, axis=0)                      # (bn, bk)
+    shift = (jax.lax.broadcasted_iota(jnp.uint32, (bn, 1), 0) % cpw) * width
+    return ((rep >> shift) & mask).astype(jnp.int32)
+
+
+def _dequant_tile(codes, cb, n_levels: int, compute_dtype):
+    """codes (bn, bk) + cb (bk, n_levels) -> W tile (bn, bk).
+
+    n_levels-way select-accumulate: for <=16 centroids this is a handful of
+    vectorized VPU ops per element — cheaper and more TPU-natural than a
+    gather from VMEM.
+    """
+    w = jnp.zeros(codes.shape, compute_dtype)
+    for c in range(n_levels):
+        w = jnp.where(codes == c, cb[None, :, c].astype(compute_dtype), w)
+    return w
+
+
+def _kernel(x_ref, *rest, bits: int, plane_widths: Sequence[int], bn: int,
+            k_out: int, n_levels: int, compute_dtype):
+    nplanes = len(plane_widths)
+    plane_refs = rest[:nplanes]
+    cb_ref = rest[nplanes]
+    if k_out > 0:
+        idx_ref, val_ref, o_ref = rest[nplanes + 1:]
+    else:
+        o_ref = rest[nplanes + 1]
+
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # --- unpack code planes -> (bn, bk) int32 codes -------------------------
+    codes = None
+    shift = 0
+    for w, ref in zip(plane_widths, plane_refs):
+        part = _unpack_tile(ref[...], w, bn) << shift
+        codes = part if codes is None else codes | part
+        shift += w
+    # --- centroid lookup -----------------------------------------------------
+    wt = _dequant_tile(codes, cb_ref[...], n_levels, compute_dtype)
+
+    # --- outlier-reservation epilogue ---------------------------------------
+    if k_out > 0:
+        n0 = pl.program_id(1) * bn
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0) + n0
+        idx = idx_ref[...]            # (k_out, bk) global row ids, -1 invalid
+        val = val_ref[...]            # (k_out, bk)
+        for r in range(k_out):
+            hit = idx[r][None, :] == row_ids             # (bn, bk)
+            wt = jnp.where(hit, val[r][None, :].astype(compute_dtype), wt)
+
+    # --- MXU ------------------------------------------------------------------
+    x = x_ref[...].astype(compute_dtype)
+    o_ref[...] += jax.lax.dot_general(
+        x, wt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "n", "bm", "bn", "bk", "interpret", "compute_dtype"),
+)
+def dequant_matmul(
+    x: Array,                     # (M, K)
+    planes: tuple,                # per-plane (n_words, K) uint32
+    codebook: Array,              # (K, 2**bits)
+    out_idx: Optional[Array],     # (k_out, K) int32 global row ids, -1 pad
+    out_val: Optional[Array],     # (k_out, K)
+    *,
+    bits: int,
+    n: int,                       # N = out features (rows of W)
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+) -> Array:
+    """y = x @ W^T for a single-stripe CLAQ tensor. Shapes must be padded to
+    block multiples by the caller (kernels/ops.py does this)."""
+    from repro.core import packing
+
+    widths = packing.plane_widths(bits)
+    m, k_dim = x.shape
+    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0
+    for w, p in zip(widths, planes):
+        assert p.shape == (n // (32 // w), k_dim), (p.shape, n, k_dim, w)
+    grid = (m // bm, n // bn, k_dim // bk)
+    n_levels = 2 ** bits
+
+    k_out = 0 if out_idx is None else out_idx.shape[0]
+
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    operands = [x]
+    for w, p in zip(widths, planes):
+        cpw = 32 // w
+        in_specs.append(pl.BlockSpec((bn // cpw, bk), lambda i, j, k: (j, k)))
+        operands.append(p)
+    in_specs.append(pl.BlockSpec((bk, n_levels), lambda i, j, k: (k, 0)))
+    operands.append(codebook)
+    if k_out > 0:
+        in_specs.append(pl.BlockSpec((k_out, bk), lambda i, j, k: (0, k)))
+        in_specs.append(pl.BlockSpec((k_out, bk), lambda i, j, k: (0, k)))
+        operands.extend([out_idx, out_val])
+
+    kernel = functools.partial(
+        _kernel, bits=bits, plane_widths=widths, bn=bn, k_out=k_out,
+        n_levels=n_levels, compute_dtype=compute_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)

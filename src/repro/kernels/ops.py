@@ -1,0 +1,135 @@
+"""Jit'd wrappers dispatching QuantizedTensor matmuls to the Pallas kernel
+(TPU / interpret) or the XLA reference path (CPU dry-run lowering).
+
+`qmatmul(x, qt)` computes x @ dequantize(qt)^T for the full multi-stripe,
+outlier-carrying format; the kernel path never materializes W in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantized import QuantizedTensor
+
+from . import dequant_matmul as dm
+from . import ref as ref_lib
+
+Array = jax.Array
+
+
+def _pad_to(arr: Array, axis: int, mult: int, value=0) -> Array:
+    size = arr.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+def stripe_matmul(
+    x: Array,
+    stripe_packed: Array,
+    codebook: Array,
+    out_idx: Optional[Array],
+    out_val: Optional[Array],
+    *,
+    bits: int,
+    n: int,
+    interpret: bool = True,
+    bm: int = dm.DEFAULT_BM,
+    bn: int = dm.DEFAULT_BN,
+    bk: int = dm.DEFAULT_BK,
+    compute_dtype=jnp.float32,
+) -> Array:
+    """Single-stripe kernel call with all padding handled. x: (M, K)."""
+    m, k_dim = x.shape
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 32))
+    bk = min(bk, _round_up(k_dim, 128))
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    kp = xp.shape[1]
+    n_padded = _round_up(n, bn)
+
+    planes = []
+    for w, p in zip(packing.plane_widths(bits),
+                    packing.split_planes(stripe_packed, bits, n)):
+        cpw = 32 // w
+        p = _pad_to(p, 0, n_padded // cpw)  # pad rows for padded N
+        p = p[: n_padded // cpw]
+        planes.append(_pad_to(p, 1, bk))
+
+    cb = _pad_to(codebook.astype(jnp.float32), 0, bk)
+    oi = ov = None
+    if out_idx is not None and out_idx.shape[0] > 0:
+        oi = _pad_to(out_idx.astype(jnp.int32), 1, bk, value=-1)
+        ov = _pad_to(out_val.astype(jnp.float32), 1, bk)
+
+    y = dm.dequant_matmul(
+        xp, tuple(planes), cb, oi, ov,
+        bits=bits, n=n_padded, bm=bm, bn=bn, bk=bk,
+        interpret=interpret, compute_dtype=compute_dtype)
+    return y[:m, :n]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _prepared_outliers(qt: QuantizedTensor):
+    """Permute outlier planes to stripe order; mark invalid slots idx=-1."""
+    if qt.out_idx.shape[0] == 0:
+        return None, None
+    k = qt.out_idx.shape[0]
+    idx_p = qt.out_idx[:, qt.col_perm]
+    val_p = qt.out_val[:, qt.col_perm]
+    cnt_p = qt.out_count[qt.col_perm]
+    valid = jnp.arange(k)[:, None] < cnt_p[None, :]
+    return jnp.where(valid, idx_p, -1), jnp.where(valid, val_p, 0.0)
+
+
+def qmatmul(
+    x: Array,
+    qt: QuantizedTensor,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    compute_dtype=None,
+) -> Array:
+    """x (..., K) @ dequantize(qt)^T -> (..., N).
+
+    use_kernel=False: XLA reference path (gather-dequant + dot). This is what
+    the CPU dry-run lowers (Pallas TPU kernels can't lower on the CPU
+    backend); its HLO cost is the *baseline* the kernel improves on.
+    use_kernel=True: the Pallas kernel (interpret=True on CPU for tests).
+    """
+    if compute_dtype is None:
+        compute_dtype = jnp.float32 if x.dtype == jnp.float32 else jnp.bfloat16
+    if not use_kernel:
+        return ref_lib.ref_qmatmul(x, qt).astype(x.dtype)
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xp = jnp.take(x2, qt.col_perm, axis=1)     # stripe order
+    oi, ov = _prepared_outliers(qt)
+
+    y = jnp.zeros((x2.shape[0], qt.rows), jnp.float32)
+    off = 0
+    for s in qt.stripes:
+        nc = s.n_cols
+        xs = jax.lax.slice_in_dim(xp, off, off + nc, axis=1)
+        soi = sov = None
+        if oi is not None:
+            soi = jax.lax.slice_in_dim(oi, off, off + nc, axis=1)
+            sov = jax.lax.slice_in_dim(ov, off, off + nc, axis=1)
+        y = y + stripe_matmul(
+            xs, s.packed, s.codebook, soi, sov,
+            bits=s.bits, n=qt.rows, interpret=interpret,
+            compute_dtype=compute_dtype)
+        off += nc
+    return y.reshape(lead + (qt.rows,)).astype(x.dtype)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose vs these)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantized import QuantizedTensor
+
+Array = jax.Array
+
+
+def ref_dequant(packed: Array, codebook: Array, bits: int, n: int) -> Array:
+    """packed (packed_rows, K) + codebook (K, 2**bits) -> W (n, K)."""
+    codes = packing.unpack_codes(packed, bits, n)
+    return jnp.take_along_axis(codebook.T.astype(jnp.float32), codes, axis=0)
+
+
+def ref_apply_outliers(W: Array, out_idx: Optional[Array],
+                       out_val: Optional[Array]) -> Array:
+    """Override W[idx[r,k], k] = val[r,k] where idx >= 0 (kernel semantics).
+
+    Invalid slots (idx < 0) are routed out of bounds and dropped
+    (mode='drop'), so they can never collide with a genuine row-0 outlier."""
+    if out_idx is None or out_idx.shape[0] == 0:
+        return W
+    n, k_dim = W.shape
+    safe = jnp.where(out_idx >= 0, out_idx, n)   # n = out of bounds -> drop
+    colk = jnp.broadcast_to(jnp.arange(k_dim)[None, :], out_idx.shape)
+    return W.at[safe, colk].set(out_val, mode="drop")
+
+
+def ref_dequant_matmul(
+    x: Array, packed: Array, codebook: Array,
+    out_idx: Optional[Array], out_val: Optional[Array],
+    *, bits: int, n: int,
+) -> Array:
+    """Oracle for kernels.dequant_matmul (single stripe): y = x @ W^T."""
+    W = ref_dequant(packed, codebook, bits, n)
+    W = ref_apply_outliers(W, out_idx, out_val)
+    return jnp.dot(x.astype(jnp.float32), W.T,
+                   preferred_element_type=jnp.float32)
+
+
+def ref_qmatmul(x: Array, qt: QuantizedTensor) -> Array:
+    """Oracle for the full multi-stripe QuantizedTensor matmul: x @ deq^T."""
+    W = qt.dequantize(jnp.float32)
+    y = jnp.einsum("...k,nk->...n", x.astype(jnp.float32), W)
+    return y

@@ -1,0 +1,458 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production mesh with 512 placeholder host devices, and extract the
+memory / FLOP / collective figures the roofline analysis (EXPERIMENTS.md)
+is built from.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun.json
+Results are cached per cell in the JSON; finished cells are skipped.
+"""
+# The VERY FIRST lines — before ANY other import — jax locks the device
+# count on first init.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, SHAPES_BY_NAME,  # noqa: E402
+                           cell_applicable, get_config)
+from repro.dist import context as dctx                        # noqa: E402
+from repro.dist import sharding as shd                         # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models import api                                   # noqa: E402
+from repro.optim import OptimConfig, OptState, init_opt_state  # noqa: E402
+from repro.train import make_train_step                        # noqa: E402
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str):
+    """Per-device collective bytes (result-shape proxy) by op kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_tok, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_tok)
+        out[kind] = out.get(kind, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model FLOPs (analytic "useful work" reference)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> dict:
+    sds = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(sds)[0]
+    total = active = embed = 0
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "embed" in name or "lm_head" in name:
+            embed += n
+            continue
+        if any(k in name for k in ("w_gate", "w_up", "w_down")):
+            active += n * cfg.top_k // max(cfg.n_experts, 1)
+        else:
+            active += n
+    return {"total": total, "active_nonembed": active, "embed": embed,
+            "nonembed": total - embed}
+
+
+def _attention_flops(cfg, B, S, kind) -> float:
+    """Analytic 'useful' mixing flops (causal-optimal; the MODEL_FLOPS
+    reference the roofline fraction is measured against)."""
+    H, hd, L_ = cfg.n_heads, cfg.head_dim, cfg.n_layers
+    if cfg.family == "encdec":
+        Le, Ld = cfg.enc_layers, cfg.dec_layers
+        enc = 4.0 * B * S * S * H * hd * Le           # bidirectional
+        dec_self = 2.0 * B * S * S * H * hd * Ld      # causal
+        cross = 4.0 * B * S * S * H * hd * Ld
+        fwd = enc + dec_self + cross
+    elif cfg.use_mla:
+        dqk = cfg.head_dim + cfg.rope_head_dim
+        fwd = (B * S * S * H * (dqk + cfg.v_head_dim)) * L_
+    elif cfg.family == "rwkv":
+        Hh = cfg.d_model // cfg.rwkv_head_dim
+        N = cfg.rwkv_head_dim
+        c = cfg.rwkv_chunk
+        # intra-chunk quadratic + state in/out terms
+        fwd = (4.0 * B * S * c * Hh * N + 4.0 * B * S * Hh * N * N) * L_
+    elif cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        Hh = d_inner // cfg.ssm_headdim
+        c = cfg.ssm_chunk
+        ssd = (2.0 * B * S * c * (cfg.ssm_state + cfg.ssm_headdim) * Hh
+               + 4.0 * B * S * Hh * cfg.ssm_headdim * cfg.ssm_state) * L_
+        W = min(cfg.attn_window or S, S)
+        attn = 2.0 * B * S * W * H * hd * cfg.n_sites
+        fwd = ssd + attn
+    else:
+        W = min(cfg.attn_window or S, S)
+        fwd = 2.0 * B * S * W * H * hd * L_           # causal (S*W/2 pairs x2)
+
+    if kind == "train":
+        return 3.0 * fwd
+    return fwd
+
+
+def _decode_attention_flops(cfg, B, S_ctx) -> float:
+    H, hd, L_ = cfg.n_heads, cfg.head_dim, cfg.n_layers
+    if cfg.family == "encdec":
+        Ld = cfg.dec_layers
+        return 4.0 * B * S_ctx * H * hd * Ld * 2      # self cache + cross
+    if cfg.use_mla:
+        # absorbed decode: scores/context against the latent cache
+        return 4.0 * B * S_ctx * cfg.n_heads * cfg.kv_lora * L_
+    if cfg.family == "rwkv":
+        Hh = cfg.d_model // cfg.rwkv_head_dim
+        return 6.0 * B * Hh * cfg.rwkv_head_dim ** 2 * L_
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        Hh = d_inner // cfg.ssm_headdim
+        ssm = 6.0 * B * Hh * cfg.ssm_headdim * cfg.ssm_state * L_
+        W = min(cfg.attn_window or S_ctx, S_ctx)
+        return ssm + 4.0 * B * W * H * hd * cfg.n_sites
+    W = min(cfg.attn_window or S_ctx, S_ctx)
+    return 4.0 * B * W * H * hd * L_
+
+
+def model_flops(cfg, cell, counts) -> float:
+    """Useful work: parameter matmuls (6ND train / 2ND inference, active
+    params for MoE) + analytic attention/SSD/WKV mixing flops."""
+    B, S = cell.global_batch, cell.seq_len
+    tokens = B * S
+    n = counts["active_nonembed"]
+    if cell.kind == "train":
+        return 6.0 * n * tokens + _attention_flops(cfg, B, S, "train")
+    if cell.kind == "prefill":
+        return 2.0 * n * tokens + _attention_flops(cfg, B, S, "prefill")
+    return 2.0 * n * B + _decode_attention_flops(cfg, B, S)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-parameter stand-ins (shape-only CLAQ plan; no GPTQ run needed
+# to LOWER the quantized serving path)
+# ---------------------------------------------------------------------------
+
+def _qt_struct(n_layers, rows, cols, qcfg):
+    """ShapeDtypeStruct tree of a layer-stacked QuantizedTensor."""
+    from repro.core import packing
+    from repro.core.policy import BITS_PER_RESERVED_OUTLIER
+    from repro.core.quantized import QuantStripe, QuantizedTensor
+
+    if qcfg.ap is not None:
+        frac = (qcfg.ap.target_bits - qcfg.ap.p_lo) / (qcfg.ap.p_hi - qcfg.ap.p_lo)
+        n_hi = int(round(frac * cols))
+        parts = [(qcfg.ap.p_lo, cols - n_hi), (qcfg.ap.p_hi, n_hi)]
+    else:
+        parts = [(qcfg.bits, cols)]
+    stripes = tuple(
+        QuantStripe(
+            packed=jax.ShapeDtypeStruct(
+                (n_layers, packing.packed_rows(rows, b), n), jnp.uint32),
+            codebook=jax.ShapeDtypeStruct((n_layers, n, 2 ** b), jnp.float32),
+            bits=b)
+        for b, n in parts if n > 0)
+    k_max = 0
+    if qcfg.orr is not None:
+        total = qcfg.orr.extra_bits * rows * cols / BITS_PER_RESERVED_OUTLIER
+        n_top = max(int(round(qcfg.orr.top_frac * cols)), 1)
+        k1 = min(int(round(qcfg.orr.o1 * total / n_top)), rows)
+        k2 = min(int(round(qcfg.orr.o2 * total / max(cols - n_top, 1))), rows)
+        k_max = max(k1, k2)
+    return QuantizedTensor(
+        stripes=stripes,
+        col_perm=jax.ShapeDtypeStruct((n_layers, cols), jnp.int32),
+        out_idx=jax.ShapeDtypeStruct((n_layers, k_max, cols), jnp.int32),
+        out_val=jax.ShapeDtypeStruct((n_layers, k_max, cols), jnp.float32),
+        out_count=jax.ShapeDtypeStruct((n_layers, cols), jnp.int32),
+        shape=(rows, cols),
+    )
+
+
+def quantize_param_sds(param_sds, cfg, qcfg):
+    """Replace eligible block kernels with QuantizedTensor stand-ins
+    (paper layout rows=out, cols=in), mirroring launch.quantize rules."""
+    from repro.launch.quantize import _SKIP_KEYS
+
+    def walk(tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in flat:
+            name = jax.tree_util.keystr(path).lower()
+            last = path[-1].key if hasattr(path[-1], "key") else ""
+            if (last == "kernel" and leaf.ndim == 3
+                    and not any(k in name for k in _SKIP_KEYS)
+                    and min(leaf.shape[1:]) >= 16):
+                L_, d_in, d_out = leaf.shape
+                out.append(_qt_struct(L_, d_out, d_in, qcfg))
+            elif (last in ("w_gate", "w_up", "w_down") and leaf.ndim == 4
+                  and min(leaf.shape[2:]) >= 16):
+                L_, E, d_in, d_out = leaf.shape
+                qt = _qt_struct(L_ * E, d_out, d_in, qcfg)
+                out.append(jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(
+                        (L_, E) + a.shape[1:], a.dtype), qt))
+            else:
+                out.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    new = dict(param_sds)
+    for key in ("blocks", "enc_blocks", "dec_blocks"):
+        if key in new:
+            new[key] = walk(new[key])
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def _sds_sharded(tree, rule, cfg, mesh):
+    return shd.with_shardings(tree, rule, cfg, mesh)
+
+
+def prepare_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = shd.MeshAxes(mesh)
+    cell = SHAPES_BY_NAME[shape_name]
+    if cfg.family == "moe":
+        groups = ax.dp_size
+        tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+        while groups > 1 and tokens % groups != 0:
+            groups //= 2
+        cfg = dataclasses.replace(cfg, moe_groups=groups)
+    return cfg, mesh, cell
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               quant: Optional[str] = None):
+    """Returns (lowered, compiled, meta). Raises on sharding bugs.
+    quant: e.g. '2.12' lowers the serving path with CLAQ QuantizedTensor
+    weights (AP+OR fusion plan at that bit-width) — the paper's deployment
+    format in the dry-run."""
+    cfg, mesh, cell = prepare_cell(arch, shape_name, multi_pod)
+
+    param_sds = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    if quant:
+        from repro.core import APConfig, CLAQConfig, ORConfig
+        bits = float(quant)
+        base = int(bits)
+        qcfg = CLAQConfig(
+            bits=base,
+            ap=(APConfig(base + (bits - base) * 0.6, base, 4)
+                if bits != base else None),
+            orr=(ORConfig((bits - base) * 0.4) if bits != base else None))
+        param_sds = quantize_param_sds(param_sds, cfg, qcfg)
+    params = _sds_sharded(param_sds, shd.spec_for_param, cfg, mesh)
+
+    batch_sds = api.input_specs(cfg, cell)
+    batch = _sds_sharded(batch_sds, shd.spec_for_batch, cfg, mesh)
+
+    with mesh, dctx.use_mesh(mesh):
+        if cell.kind == "train":
+            ocfg = OptimConfig(total_steps=10000)
+            opt_sds = jax.eval_shape(lambda p: init_opt_state(p, ocfg), param_sds)
+            opt = OptState(
+                m=_sds_sharded(opt_sds.m, shd.spec_for_param, cfg, mesh),
+                v=_sds_sharded(opt_sds.v, shd.spec_for_param, cfg, mesh),
+                step=jax.ShapeDtypeStruct(
+                    (), jnp.int32,
+                    sharding=jax.NamedSharding(mesh, jax.sharding.PartitionSpec())),
+                err=None,
+            )
+            step_fn = make_train_step(cfg, ocfg)
+            lowered = jax.jit(step_fn).lower(params, opt, batch)
+        elif cell.kind == "prefill":
+            params = _sds_sharded(param_sds, shd.spec_for_param_serve, cfg, mesh)
+            cache_sds = api.cache_specs(cfg, cell)
+            cache = _sds_sharded(cache_sds, shd.spec_for_cache, cfg, mesh)
+
+            def prefill_fn(p, b, c):
+                return api.prefill_step(p, cfg, b, c)
+            lowered = jax.jit(prefill_fn).lower(params, batch, cache)
+        else:  # decode
+            params = _sds_sharded(param_sds, shd.spec_for_param_serve, cfg, mesh)
+            cache_sds = api.cache_specs(cfg, cell)
+            cache = _sds_sharded(cache_sds, shd.spec_for_cache, cfg, mesh)
+            tok = jax.ShapeDtypeStruct(
+                (cell.global_batch,), jnp.int32,
+                sharding=jax.NamedSharding(
+                    mesh, shd.spec_for_batch(
+                        "token", (cell.global_batch,), cfg, shd.MeshAxes(mesh))))
+
+            def decode_fn(p, t, c):
+                return api.decode_step(p, cfg, t, c)
+            lowered = jax.jit(decode_fn).lower(params, tok, cache)
+
+        compiled = lowered.compile()
+    return lowered, compiled, (cfg, mesh, cell)
+
+
+def analyze(compiled, cfg, mesh, cell) -> dict:
+    """Loop/fusion-aware roofline terms from the compiled per-device HLO
+    (dist.hlo_analysis; XLA's own cost_analysis counts scan bodies once and
+    ignores fusion, so it is kept only as a reference field)."""
+    from repro.dist.hlo_analysis import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    h = analyze_hlo(hlo)
+    counts = count_params(cfg)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    flops_dev = float(h["flops"])
+    bytes_dev = float(h["hbm_bytes"])
+    coll_total = float(h["collective_bytes"])
+    mflops = model_flops(cfg, cell, counts)
+
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll_total / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    bottleneck = max(terms, key=terms.get)
+
+    return {
+        "chips": n_chips,
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_total,
+            "collectives": {k.replace("coll_", ""): v
+                            for k, v in h.items() if k.startswith("coll_")},
+            "xla_cost_flops_1iter": float(cost.get("flops", 0.0)),
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+        },
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck.replace("_s", ""),
+            "model_flops_global": mflops,
+            "model_flops_per_dev": mflops / n_chips,
+            "useful_flop_fraction": (mflops / n_chips) / max(flops_dev, 1.0),
+            "roofline_fraction": (mflops / n_chips / PEAK_FLOPS)
+                                  / max(terms[bottleneck], 1e-30),
+        },
+        "params": counts,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quant: Optional[str] = None) -> dict:
+    cfg0 = get_config(arch)
+    cell = SHAPES_BY_NAME[shape_name]
+    ok, reason = cell_applicable(cfg0, cell)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        lowered, compiled, (cfg, mesh, cell) = lower_cell(
+            arch, shape_name, multi_pod, quant=quant)
+        result = analyze(compiled, cfg, mesh, cell)
+        result.update(status="ok", compile_s=round(time.time() - t0, 1))
+        return result
+    except Exception as e:  # a sharding bug is a bug in our system
+        return {"status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = ([s.name for s in SHAPES] if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if key in results and results[key].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                res = run_cell(arch, shape, mp)
+                results[key] = res
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" frac={r['roofline_fraction']:.3f}"
+                             f" compile={res['compile_s']}s")
+                elif status == "error":
+                    extra = " " + res["error"][:160]
+                print(f"[dryrun] {key} -> {status}{extra}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    n_skip = sum(1 for v in results.values() if v.get("status") == "skipped")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,200 @@
+"""The CLAQ PTQ pipeline: calibrate -> plan -> quantize -> package.
+
+Mirrors the paper's protocol (§4.1/App. F): 128x2048-token calibration
+segments, per-matrix Hessians accumulated from the activations feeding each
+matmul, GPTQ-compensated K-Means quantization per column, AP/OR budgets
+from the Outlier Order metric.
+
+Calibration runs the model *eagerly and unrolled* so the tap collector sees
+concrete per-layer activations (the JAX stand-in for torch forward hooks);
+only the (in,in) moment matrices are kept, so memory stays O(d_model^2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CLAQConfig, QuantizedTensor, quantize_matrix
+from repro.core import claq as claq_lib
+from repro.models import api
+from repro.models import modules as nn
+
+Array = jax.Array
+
+# parameter dicts that hold quantizable kernels, and names never quantized
+_SKIP_KEYS = ("embedding", "scale", "bias", "a_log", "dt_bias", "d_skip",
+              "conv_w", "conv_b", "mix", "w_bias", "u_bonus", "router",
+              "lora_a", "lora_b")
+
+
+def calibrate(params, cfg, calib_tokens: Array, batch_size: int = 4,
+              extra_batches: Optional[Dict[str, Array]] = None
+              ) -> Dict[str, Array]:
+    """Run calibration batches through the model eagerly; returns
+    {tap_name: (in,in) Hessian}."""
+    collector = nn.TapCollector()
+    n = calib_tokens.shape[0]
+    with nn.collecting(collector):
+        for i in range(0, n, batch_size):
+            chunk = calib_tokens[i:i + batch_size]
+            batch = {"tokens": chunk}
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (chunk.shape[0], chunk.shape[1], cfg.d_model), jnp.float32)
+            if extra_batches:
+                batch.update({k: v[i:i + batch_size]
+                              for k, v in extra_batches.items()})
+            api.loss_fn(params, cfg, batch, unroll=True)
+    return collector.finalized()
+
+
+def _dotted(path) -> str:
+    """pytree key path -> dotted name ('attn.q')."""
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return ".".join(p for p in out if p != "kernel")
+
+
+def _sum_hessians(hessians: Dict[str, Array], pattern: str) -> Optional[Array]:
+    rx = re.compile(pattern)
+    acc = None
+    for name, H in hessians.items():
+        if rx.fullmatch(name):
+            acc = H if acc is None else acc + H
+    return acc
+
+
+@dataclasses.dataclass
+class QuantizeReport:
+    stats: Dict[str, claq_lib.QuantStats]
+
+    @property
+    def mean_effective_bits(self) -> float:
+        if not self.stats:
+            return 0.0
+        return float(np.mean([s.effective_bits for s in self.stats.values()]))
+
+    @property
+    def total_proxy_loss(self) -> float:
+        return float(np.sum([s.proxy_loss for s in self.stats.values()]))
+
+
+def _quantize_leaf(kernel, H, qcfg, mesh=None):
+    """kernel (in,out) -> QuantizedTensor (paper layout), stats."""
+    qt, _, st = quantize_matrix(jnp.asarray(kernel, jnp.float32).T, H, qcfg,
+                                mesh=mesh)
+    return qt, st
+
+
+def _quantize_subtree(sub, hessians, prefix_fmt, n_items, qcfg, stats,
+                      mesh=None, expert_keys=("w_gate", "w_up", "w_down")):
+    """Quantize every eligible kernel of a stacked subtree (layer axis
+    leading), re-stacking results across the stack."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sub)
+    per_item = [[] for _ in range(n_items)]
+    for path, leaf in flat:
+        dotted = _dotted(path)
+        last = path[-1].key if hasattr(path[-1], "key") else ""
+        eligible = (
+            last == "kernel"
+            and not any(k in dotted for k in _SKIP_KEYS)
+            and leaf.ndim == 3 and min(leaf.shape[1:]) >= 16)
+        expert = (last in expert_keys and leaf.ndim == 4
+                  and min(leaf.shape[2:]) >= 16)
+        for i in range(n_items):
+            li = leaf[i]
+            if eligible:
+                tap = prefix_fmt.format(i) + "." + dotted
+                H = hessians.get(tap)  # None -> identity (weight-space)
+                qt, st = _quantize_leaf(li, H, qcfg, mesh)
+                stats[f"{prefix_fmt.format(i)}.{dotted}"] = st
+                per_item[i].append(qt)
+            elif expert:
+                E = li.shape[0]
+                qts = []
+                mid = last == "w_down"   # input dim is F (expert_mid taps)
+                for e in range(E):
+                    tap = (prefix_fmt.format(i)
+                           + f".mlp.expert_{'mid' if mid else 'in'}_{e}")
+                    H = hessians.get(tap)
+                    # li[e] is (in, out) for gate/up and down alike
+                    qt, st = _quantize_leaf(li[e], H, qcfg, mesh)
+                    qts.append(qt)
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *qts)
+                stats[f"{prefix_fmt.format(i)}.{dotted}.{last}"] = st
+                per_item[i].append(stacked)
+            else:
+                per_item[i].append(li)
+    items = [jax.tree_util.tree_unflatten(treedef, leaves)
+             for leaves in per_item]
+    return jax.tree_util.tree_map(lambda *xs: _stack_mixed(*xs), *items)
+
+
+def _stack_mixed(*xs):
+    return jnp.stack(xs)
+
+
+def quantize_model_params(
+    params: Dict[str, Any],
+    cfg,
+    hessians: Dict[str, Array],
+    qcfg: CLAQConfig,
+    mesh=None,
+) -> Tuple[Dict[str, Any], QuantizeReport]:
+    """Quantize all block weights of a model (embeddings/norms/head stay fp,
+    matching the paper's weight-only scope).  Returns (params', report)."""
+    stats: Dict[str, claq_lib.QuantStats] = {}
+    out = dict(params)
+
+    if cfg.family == "encdec":
+        out["enc_blocks"] = _quantize_subtree(
+            params["enc_blocks"], hessians, "enc.{}", cfg.enc_layers,
+            qcfg, stats, mesh)
+        out["dec_blocks"] = _quantize_subtree(
+            params["dec_blocks"], hessians, "dec.{}", cfg.dec_layers,
+            qcfg, stats, mesh)
+        return out, QuantizeReport(stats)
+
+    out["blocks"] = _quantize_subtree(
+        params["blocks"], hessians, "layers.{}", cfg.n_layers,
+        qcfg, stats, mesh)
+
+    if "shared_attn" in params:
+        # shared across sites: sum the per-site Hessians
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params["shared_attn"])
+        leaves = []
+        for path, leaf in flat:
+            dotted = _dotted(path)
+            last = path[-1].key if hasattr(path[-1], "key") else ""
+            if (last == "kernel" and leaf.ndim == 2
+                    and not any(k in dotted for k in _SKIP_KEYS)
+                    and min(leaf.shape) >= 16):
+                H = _sum_hessians(
+                    hessians, r"shared_attn\.site\d+\." + re.escape(dotted))
+                qt, st = _quantize_leaf(leaf, H, qcfg, mesh)
+                stats[f"shared_attn.{dotted}"] = st
+                leaves.append(qt)
+            else:
+                leaves.append(leaf)
+        out["shared_attn"] = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return out, QuantizeReport(stats)
+
+
+def claq_quantize(params, cfg, calib_tokens, qcfg: CLAQConfig,
+                  batch_size: int = 4, mesh=None,
+                  extra_batches: Optional[Dict[str, Array]] = None):
+    """End-to-end: calibrate + quantize. The paper's full pipeline."""
+    hessians = calibrate(params, cfg, calib_tokens, batch_size, extra_batches)
+    return quantize_model_params(params, cfg, hessians, qcfg, mesh)

@@ -1,0 +1,1 @@
+"""Model zoo: config-driven architectures (dense/MoE/MLA/SSM/RWKV/enc-dec)."""

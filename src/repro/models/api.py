@@ -1,0 +1,104 @@
+"""Family-agnostic model API: init / loss / cache / prefill / decode, plus
+the ShapeDtypeStruct input-spec builders the dry-run lowers against."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+from . import encdec as ed
+from . import transformer as tf
+
+Array = jax.Array
+
+
+def init_params(rng, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return ed.encdec_init(rng, cfg)
+    return tf.init_params(rng, cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array],
+            unroll: bool = False):
+    if cfg.family == "encdec":
+        return ed.encdec_loss(params, cfg, batch, unroll=unroll)
+    return tf.lm_loss(params, cfg, batch, unroll=unroll)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               src_len: Optional[int] = None, dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return ed.init_encdec_cache(cfg, batch, max_len, src_len or max_len,
+                                    dtype)
+    return tf.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill_step(params, cfg: ModelConfig, batch: Dict[str, Array], cache,
+                 unroll: bool = False):
+    if cfg.family == "encdec":
+        return ed.encdec_prefill(params, cfg, batch["frames"],
+                                 batch["tokens"], cache, unroll=unroll)
+    return tf.prefill(params, cfg, batch["tokens"], cache,
+                      prefix_embeds=batch.get("prefix_embeds"), unroll=unroll)
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, cache,
+                unroll: bool = False):
+    if cfg.family == "encdec":
+        return ed.encdec_decode_step(params, cfg, token, cache, unroll=unroll)
+    return tf.decode_step(params, cfg, token, cache, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Input specs for the dry-run (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Inputs for the cell's entry point (train loss / prefill / decode).
+
+    For modality archs the frontend is a stub: `prefix_embeds` / `frames`
+    stand in for the precomputed patch/frame embeddings.
+    """
+    B, S = cell.global_batch, cell.seq_len
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if cell.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": _sds((B, S, cfg.d_model), act),
+                    "tokens": _sds((B, S), jnp.int32)}
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.modality == "vision":
+            P = int(S * cfg.prefix_frac)
+            batch = {"tokens": _sds((B, S - P), jnp.int32),
+                     "prefix_embeds": _sds((B, P, cfg.d_model), act)}
+        return batch
+
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": _sds((B, S, cfg.d_model), act),
+                    "tokens": _sds((B, S), jnp.int32)}
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.modality == "vision":
+            P = int(S * cfg.prefix_frac)
+            batch = {"tokens": _sds((B, S - P), jnp.int32),
+                     "prefix_embeds": _sds((B, P, cfg.d_model), act)}
+        return batch
+
+    # decode: one new token + cache of seq_len
+    return {"token": _sds((B,), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree of the (filled) cache a decode/prefill cell uses."""
+    B, S = cell.global_batch, cell.seq_len
+    src = S if cfg.family == "encdec" else None
+    cache = jax.eval_shape(
+        lambda: make_cache(cfg, B, S, src_len=src, dtype=dtype))
+    return cache

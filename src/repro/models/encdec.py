@@ -1,0 +1,239 @@
+"""Encoder–decoder backbone (seamless-m4t-medium text/unit path).
+
+The speech frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, D).  Decoder = causal self-attn +
+cross-attn + MLP.  Serving caches the decoder self-attention KV and the
+cross-attention K/V (projected once from the encoder output at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import modules as nn
+from . import layers as L
+
+Array = jax.Array
+
+
+class EncDecCache(NamedTuple):
+    self_kv: Any       # stacked L.KVCache over dec layers
+    cross_k: Array     # (L_dec, B, S_src, KH, hd)
+    cross_v: Array
+    enc_len: Array
+
+
+def _cross_init(rng, cfg, dtype):
+    H, KH, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    r = nn.split_rngs(rng, 4)
+    return {
+        "q": nn.dense_init(r[0], D, H * hd, dtype=dtype),
+        "k": nn.dense_init(r[1], D, KH * hd, dtype=dtype),
+        "v": nn.dense_init(r[2], D, KH * hd, dtype=dtype),
+        "o": nn.dense_init(r[3], H * hd, D, dtype=dtype),
+    }
+
+
+def encdec_init(rng, cfg) -> Dict[str, Any]:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    r_embed, r_enc, r_dec, r_head = jax.random.split(rng, 4)
+
+    def enc_block(r):
+        r1, r2 = jax.random.split(r)
+        return {
+            "ln1": nn.rms_norm_init(cfg.d_model),
+            "attn": L.attention_init(r1, cfg, dtype),
+            "ln2": nn.rms_norm_init(cfg.d_model),
+            "mlp": L.gelu_mlp_init(r2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_block(r):
+        r1, r2, r3 = jax.random.split(r, 3)
+        return {
+            "ln1": nn.rms_norm_init(cfg.d_model),
+            "attn": L.attention_init(r1, cfg, dtype),
+            "ln_x": nn.rms_norm_init(cfg.d_model),
+            "cross": _cross_init(r2, cfg, dtype),
+            "ln2": nn.rms_norm_init(cfg.d_model),
+            "mlp": L.gelu_mlp_init(r3, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    return {
+        "embed": nn.embed_init(r_embed, cfg.vocab, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(enc_block)(
+            jnp.stack(jax.random.split(r_enc, cfg.enc_layers))),
+        "dec_blocks": jax.vmap(dec_block)(
+            jnp.stack(jax.random.split(r_dec, cfg.dec_layers))),
+        "enc_norm": nn.rms_norm_init(cfg.d_model),
+        "final_norm": nn.rms_norm_init(cfg.d_model),
+        "lm_head": nn.dense_init(r_head, cfg.d_model, cfg.vocab, dtype=dtype),
+    }
+
+
+def _cross_attention(p, x, enc_kv, cfg, enc_len=None):
+    """x (B,St,D) queries over cached encoder K/V (B,Ss,KH,hd)."""
+    B, St, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = nn.dense(p["q"], x, "q").reshape(B, St, H, hd)
+    k, v = enc_kv
+    q, k, v, bspec = L.attn_constrain(q, k.astype(x.dtype),
+                                      v.astype(x.dtype), cfg.q_block)
+    out = L.blocked_attention(q, k, v, causal=False, kv_len=enc_len,
+                              q_block=cfg.q_block, kv_block=cfg.kv_block,
+                              block_spec=bspec)
+    return nn.dense(p["o"], out.reshape(B, St, H * hd), "o")
+
+
+def encode(params, cfg, frames: Array, unroll: bool = False) -> Array:
+    """frames (B, S_src, D) -> encoder states. Bidirectional self-attn."""
+    x = frames.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+    def body_fn(h, p_i):
+        hn = nn.rms_norm(p_i["ln1"], h, cfg.norm_eps)
+        B, S, _ = hn.shape
+        H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        with nn.scope("attn"):
+            q = nn.dense(p_i["attn"]["q"], hn, "q").reshape(B, S, H, hd)
+            k = nn.dense(p_i["attn"]["k"], hn, "k").reshape(B, S, KH, hd)
+            v = nn.dense(p_i["attn"]["v"], hn, "v").reshape(B, S, KH, hd)
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            cos, sin = L.rope_angles(pos, cfg.rotary_dim or hd, cfg.rope_theta)
+            q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+            q, k, v, bspec = L.attn_constrain(q, k, v, cfg.q_block)
+            a = L.blocked_attention(q, k, v, causal=False,
+                                    q_block=cfg.q_block, kv_block=cfg.kv_block,
+                                    block_spec=bspec)
+            h = h + nn.dense(p_i["attn"]["o"], a.reshape(B, S, H * hd), "o")
+        hn = nn.rms_norm(p_i["ln2"], h, cfg.norm_eps)
+        with nn.scope("mlp"):
+            h = h + L.gelu_mlp(p_i["mlp"], hn)
+        return h
+
+    if unroll or not cfg.scan_layers:
+        for i in range(cfg.enc_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["enc_blocks"])
+            with nn.scope(f"enc.{i}"):
+                x = body_fn(x, p_i)
+    else:
+        body = (lambda h, p_i: (body_fn(h, p_i), None))
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return nn.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(p, x, cfg, enc_kv, enc_len, cache):
+    h = nn.rms_norm(p["ln1"], x, cfg.norm_eps)
+    with nn.scope("attn"):
+        a, new_cache = L.gqa_attention(p["attn"], h, cfg, cache)
+    x = x + a
+    h = nn.rms_norm(p["ln_x"], x, cfg.norm_eps)
+    with nn.scope("cross"):
+        x = x + _cross_attention(p["cross"], h, enc_kv, cfg, enc_len)
+    h = nn.rms_norm(p["ln2"], x, cfg.norm_eps)
+    with nn.scope("mlp"):
+        x = x + L.gelu_mlp(p["mlp"], h)
+    return x, new_cache
+
+
+def _project_cross_kv(params, cfg, enc_out):
+    """Per-decoder-layer cross K/V from encoder states (cached at prefill)."""
+    B, Ss, _ = enc_out.shape
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def one(p_i):
+        k = nn.dense(p_i["cross"]["k"], enc_out, "cross_k").reshape(B, Ss, KH, hd)
+        v = nn.dense(p_i["cross"]["v"], enc_out, "cross_v").reshape(B, Ss, KH, hd)
+        return k, v
+
+    return jax.lax.map(one, params["dec_blocks"])
+
+
+def decode_blocks(params, cfg, x, enc_out=None, cross_kv=None, enc_len=None,
+                  caches=None, unroll: bool = False):
+    if cross_kv is None:
+        cross_kv = _project_cross_kv(params, cfg, enc_out)
+    ck, cv = cross_kv
+
+    if unroll or not cfg.scan_layers:
+        new_caches = []
+        for i in range(cfg.dec_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
+            c_i = (None if caches is None
+                   else jax.tree_util.tree_map(lambda a: a[i], caches))
+            with nn.scope(f"dec.{i}"):
+                x, c_new = _dec_layer(p_i, x, cfg, (ck[i], cv[i]), enc_len, c_i)
+            new_caches.append(c_new)
+        stacked = (None if caches is None else jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_caches))
+        return x, stacked, (ck, cv)
+
+    def body(h, xs):
+        p_i, ck_i, cv_i, c_i = xs
+        h, c_new = _dec_layer(p_i, h, cfg, (ck_i, cv_i), enc_len, c_i)
+        return h, c_new
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, new_caches = jax.lax.scan(
+        body, x, (params["dec_blocks"], ck, cv, caches))
+    return x, new_caches, (ck, cv)
+
+
+def encdec_loss(params, cfg, batch: Dict[str, Array], unroll: bool = False):
+    """batch: frames (B,Ss,D), tokens (B,St)."""
+    enc_out = encode(params, cfg, batch["frames"], unroll=unroll)
+    x = nn.embed(params["embed"], batch["tokens"])
+    x, _, _ = decode_blocks(params, cfg, x, enc_out=enc_out, unroll=unroll)
+    x = nn.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = nn.dense(params["lm_head"], x, "lm_head")
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = batch["tokens"][:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean(), {"nll": nll.mean()}
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int, src_len: int,
+                      dtype=jnp.bfloat16) -> EncDecCache:
+    one = L.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+    self_kv = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape), one)
+    return EncDecCache(
+        self_kv=self_kv,
+        cross_k=jnp.zeros((cfg.dec_layers, batch, src_len,
+                           cfg.n_kv_heads, cfg.head_dim), dtype),
+        cross_v=jnp.zeros((cfg.dec_layers, batch, src_len,
+                           cfg.n_kv_heads, cfg.head_dim), dtype),
+        enc_len=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def encdec_prefill(params, cfg, frames, tokens, cache: EncDecCache,
+                   unroll: bool = False):
+    enc_out = encode(params, cfg, frames, unroll=unroll)
+    x = nn.embed(params["embed"], tokens)
+    x, self_kv, (ck, cv) = decode_blocks(
+        params, cfg, x, enc_out=enc_out, caches=cache.self_kv, unroll=unroll)
+    x = nn.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = nn.dense(params["lm_head"], x, "lm_head")
+    new_cache = EncDecCache(self_kv=self_kv,
+                            cross_k=ck.astype(cache.cross_k.dtype),
+                            cross_v=cv.astype(cache.cross_v.dtype),
+                            enc_len=jnp.full((frames.shape[0],), frames.shape[1], jnp.int32))
+    return logits[:, -1], new_cache
+
+
+def encdec_decode_step(params, cfg, token: Array, cache: EncDecCache,
+                       unroll: bool = False):
+    if token.ndim == 1:
+        token = token[:, None]
+    x = nn.embed(params["embed"], token)
+    x, self_kv, _ = decode_blocks(
+        params, cfg, x, cross_kv=(cache.cross_k, cache.cross_v),
+        enc_len=cache.enc_len, caches=cache.self_kv, unroll=unroll)
+    x = nn.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = nn.dense(params["lm_head"], x, "lm_head")
+    new_cache = cache._replace(self_kv=self_kv)
+    return logits[:, -1], new_cache

@@ -1,0 +1,370 @@
+"""Shared transformer layers: RoPE, blocked (flash-style) attention, GQA
+attention sublayer with KV cache, SwiGLU MLP.
+
+Attention is double-blocked (query blocks x kv blocks) with an online
+softmax — pure jnp/lax, so it lowers on any backend, keeps the S^2 score
+matrix out of memory (critical for the 32k prefill dry-run cells), and is
+sharding-transparent under pjit (head/batch/sequence axes shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from . import modules as nn
+
+Array = jax.Array
+
+
+def attn_constrain(q, k, v, q_block: int = 512):
+    """Pick the attention compute sharding (first viable):
+      1) KV heads over `model` (clean TP);
+      2) batch over dp+model (head-indivisible archs at large batch);
+      3) query rows *within each q block* over `model` (context-parallel
+         prefill at small batch — the q-block scan axis itself cannot be
+         sharded, so rows inside the block are);
+      4) data-parallel only.
+    Returns (q, k, v, block_spec) where block_spec is the sharding hint
+    applied to every (B, KH, G, q_block, D) tile inside blocked_attention.
+    `dctx.constrain` drops any non-divisible axis, so later options only
+    engage when earlier ones resolved to None."""
+    mesh = dctx.get_mesh()
+    if mesh is None:
+        return q, k, v, None
+    msz = mesh.shape["model"]
+    B, Sq, H, _ = q.shape
+    KH = k.shape[2]
+    dp = dctx._axis_size(mesh, "dp")
+    if KH % msz == 0:
+        q = dctx.constrain(q, "dp", None, "model", None)
+        k = dctx.constrain(k, "dp", None, "model", None)
+        v = dctx.constrain(v, "dp", None, "model", None)
+        return q, k, v, ("dp", "model", None, None, None)
+    if B % (dp * msz) == 0:
+        q = dctx.constrain(q, "dp+model", None, None, None)
+        k = dctx.constrain(k, "dp+model", None, None, None)
+        v = dctx.constrain(v, "dp+model", None, None, None)
+        return q, k, v, ("dp+model", None, None, None, None)
+    q = dctx.constrain(q, "dp", None, None, None)
+    k = dctx.constrain(k, "dp", None, None, None)
+    v = dctx.constrain(v, "dp", None, None, None)
+    if min(q_block, Sq) % msz == 0 and Sq > 1:
+        return q, k, v, ("dp", None, None, "model", None)
+    return q, k, v, ("dp", None, None, None, None)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: Array, rotary_dim: int, theta: float) -> Tuple[Array, Array]:
+    """positions (..., S) -> cos/sin (..., S, rotary_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (B, S, H, D); cos/sin (B, S, D_rot/2). Rotates the first D_rot dims
+    (paired as [0::2], [1::2])."""
+    d_rot = 2 * cos.shape[-1]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    y = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([y, xp], axis=-1) if xp.shape[-1] else y
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention
+# ---------------------------------------------------------------------------
+
+def blocked_attention(
+    q: Array,                      # (B, Sq, H, D)
+    k: Array,                      # (B, Skv, KH, D)
+    v: Array,                      # (B, Skv, KH, Dv)
+    *,
+    causal: bool = True,
+    q_offset: Array | int = 0,     # global position of q[0] (decode/prefill)
+    kv_len: Optional[Array] = None,  # valid kv entries (cache fill level)
+    q_block: int = 512,
+    kv_block: int = 1024,
+    window: Optional[int] = None,  # sliding-window attention (zamba long-ctx)
+    block_spec=None,               # sharding hint for (B,KH,G,qb,D) tiles
+) -> Array:
+    B, Sq, H, D = q.shape
+    _, Skv, KH, Dv = v.shape
+    assert H % KH == 0
+    G = H // KH
+    scale = D ** -0.5
+
+    q_block = min(q_block, max(Sq, 1))
+    kv_block = min(kv_block, max(Skv, 1))
+    sq_p = -(-Sq // q_block) * q_block
+    skv_p = -(-Skv // kv_block) * kv_block
+
+    qh = jnp.pad(q, ((0, 0), (0, sq_p - Sq), (0, 0), (0, 0)))
+    kh = jnp.pad(k, ((0, 0), (0, skv_p - Skv), (0, 0), (0, 0)))
+    vh = jnp.pad(v, ((0, 0), (0, skv_p - Skv), (0, 0), (0, 0)))
+
+    # (B,S,H,D) -> (B,KH,G,S,D) / (B,KH,S,D)
+    qh = qh.transpose(0, 2, 1, 3).reshape(B, KH, G, sq_p, D) * scale
+    kh = kh.transpose(0, 2, 1, 3)
+    vh = vh.transpose(0, 2, 1, 3)
+
+    nq, nk = sq_p // q_block, skv_p // kv_block
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq_p)
+    kv_pos = jnp.arange(skv_p)
+    # kv_len may be scalar or per-batch (B,) (serving slots fill unevenly)
+    kv_lim = jnp.broadcast_to(
+        jnp.asarray(Skv if kv_len is None else kv_len), (B,))
+    kv_valid = kv_pos[None, :] < kv_lim[:, None]            # (B, skv_p)
+
+    # stack blocks for scan: kv (nk, B, KH, kb, D)
+    k_blk = jnp.moveaxis(kh.reshape(B, KH, nk, kv_block, D), 2, 0)
+    v_blk = jnp.moveaxis(vh.reshape(B, KH, nk, kv_block, Dv), 2, 0)
+    kpos_blk = kv_pos.reshape(nk, kv_block)
+    kval_blk = jnp.moveaxis(kv_valid.reshape(B, nk, kv_block), 1, 0)
+
+    def q_body(qb, qpos_b):
+        # qb (B,KH,G,qb,D); qpos_b (qb,)
+        if block_spec is not None:
+            qb = dctx.constrain(qb, *block_spec)
+        m0 = jnp.full((B, KH, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, q_block, Dv), jnp.float32)
+
+        def kv_body(carry, blk):
+            m, l, acc = carry
+            kc, vc, kpos_c, kval_c = blk
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kc,
+                           preferred_element_type=jnp.float32)
+            mask = kval_c[:, None, None, None, :]          # (B,1,1,1,kb)
+            if causal:
+                mask = mask & (kpos_c[None, :] <= qpos_b[:, None])[None, None, None]
+            if window is not None:
+                mask = mask & (kpos_c[None, :] > qpos_b[:, None] - window)[None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksv->bkgqv", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      (k_blk, v_blk, kpos_blk, kval_blk))
+        out_b = acc / jnp.maximum(l, 1e-30)[..., None]
+        if block_spec is not None:
+            out_b = dctx.constrain(out_b, *block_spec)
+        return out_b
+
+    q_blk = jnp.moveaxis(qh.reshape(B, KH, G, nq, q_block, D), 3, 0)
+    qpos_blk = q_pos.reshape(nq, q_block)
+    out = jax.lax.map(lambda args: q_body(*args), (q_blk, qpos_blk))
+    # (nq,B,KH,G,qb,Dv) -> (B, Sq, H, Dv)
+    out = jnp.moveaxis(out, 0, 3).reshape(B, KH, G, sq_p, Dv)
+    out = out.reshape(B, H, sq_p, Dv).transpose(0, 2, 1, 3)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sublayer (with KV cache)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array        # (B, S_max, KH, D)
+    v: Array        # (B, S_max, KH, D)
+    length: Array   # (B,) int32 — filled entries per serving slot
+
+
+def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def gqa_attention(
+    p: Dict[str, Any],
+    x: Array,                      # (B, S, D)
+    cfg,
+    cache: Optional[KVCache] = None,
+    positions: Optional[Array] = None,
+) -> Tuple[Array, Optional[KVCache]]:
+    """Standard GQA attention with optional qk-norm, qkv-bias, window.
+
+    With a cache: appends S new tokens at cache.length and attends over the
+    full cache (decode / chunked prefill).  Without: causal self-attention.
+    """
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = nn.dense(p["q"], x, "q").reshape(B, S, H, hd)
+    k = nn.dense(p["k"], x, "k").reshape(B, S, KH, hd)
+    v = nn.dense(p["v"], x, "v").reshape(B, S, KH, hd)
+
+    if cfg.qk_norm:
+        q = nn.rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = nn.rms_norm(p["k_norm"], k, cfg.norm_eps)
+
+    if positions is None:
+        if cache is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        else:
+            positions = cache.length[:, None] + jnp.arange(S)[None, :]
+    rot = cfg.rotary_dim or hd
+    cos, sin = rope_angles(positions, rot, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    block_spec = None
+    if S > 1:  # train / prefill (decode shards via the cache's own specs)
+        q, k, v, block_spec = attn_constrain(q, k, v, cfg.q_block)
+
+    window = getattr(cfg, "attn_window", None)
+    brange = jnp.arange(B)
+
+    if cache is None:
+        out = blocked_attention(q, k, v, causal=True, window=window,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block,
+                                block_spec=block_spec)
+        new_cache = None
+    elif window is not None and cache.k.shape[1] <= window:
+        # Ring cache for sliding-window attention (cache holds exactly the
+        # window; slot = absolute_position % W).  Keys are stored post-RoPE,
+        # so slot order doesn't matter for the masked softmax.
+        W = cache.k.shape[1]
+        if S == 1:
+            slot = jax.lax.rem(cache.length, W)              # (B,)
+            k_all = cache.k.at[brange, slot].set(k[:, 0].astype(cache.k.dtype))
+            v_all = cache.v.at[brange, slot].set(v[:, 0].astype(cache.v.dtype))
+            new_len = cache.length + 1
+            valid = jnp.minimum(new_len, W)
+            out = _decode_attention(q, k_all, v_all, valid, window=None)
+            new_cache = KVCache(k_all, v_all, new_len)
+        else:
+            # single-shot prefill into a ring (requires empty cache)
+            out = blocked_attention(q, k, v, causal=True, window=window,
+                                    q_block=cfg.q_block, kv_block=cfg.kv_block,
+                                    block_spec=block_spec)
+            if S >= W:
+                k_keep, v_keep = k[:, S - W:], v[:, S - W:]
+                shift = S % W
+                k_all = jnp.roll(k_keep, shift, axis=1).astype(cache.k.dtype)
+                v_all = jnp.roll(v_keep, shift, axis=1).astype(cache.v.dtype)
+            else:
+                k_all = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+                v_all = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+            new_cache = KVCache(k_all, v_all, cache.length + S)
+    elif S == 1:
+        # decode: per-slot scatter at each slot's own fill level
+        idx = cache.length                                   # (B,)
+        k_all = cache.k.at[brange, idx].set(k[:, 0].astype(cache.k.dtype))
+        v_all = cache.v.at[brange, idx].set(v[:, 0].astype(cache.v.dtype))
+        new_len = cache.length + 1
+        out = _decode_attention(q, k_all, v_all, new_len, window)
+        new_cache = KVCache(k_all, v_all, new_len)
+    else:
+        # chunked prefill: uniform fill level assumed across the batch
+        start = cache.length[0]
+        k_all = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, start, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
+        new_len = cache.length + S
+        out = blocked_attention(q, k_all, v_all, causal=True,
+                                q_offset=start, kv_len=new_len,
+                                window=window, q_block=cfg.q_block,
+                                kv_block=cfg.kv_block, block_spec=block_spec)
+        new_cache = KVCache(k_all, v_all, new_len)
+
+    out = out.reshape(B, S, H * hd)
+    return nn.dense(p["o"], out, "o"), new_cache
+
+
+def _decode_attention(q, k_cache, v_cache, kv_len, window=None):
+    """Single-token decode: q (B,1,H,D) vs full cache — direct masked path.
+    kv_len: (B,) valid entries per slot."""
+    B, _, H, D = q.shape
+    _, S, KH, Dv = v_cache.shape
+    G = H // KH
+    # operands stay in cache dtype (bf16); MXU accumulates in f32 — avoids
+    # materializing an f32 copy of the whole cache (2x decode HBM traffic)
+    qh = q.reshape(B, KH, G, D) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(S)
+    lim = jnp.broadcast_to(jnp.asarray(kv_len), (B,))[:, None, None, None]
+    mask = pos[None, None, None, :] < lim
+    if window is not None:
+        mask = mask & (pos[None, None, None, :] > lim - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskv->bkgv", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def attention_init(rng, cfg, dtype=jnp.float32):
+    H, KH, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    r = nn.split_rngs(rng, 4)
+    p = {
+        "q": nn.dense_init(r[0], D, H * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "k": nn.dense_init(r[1], D, KH * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "v": nn.dense_init(r[2], D, KH * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "o": nn.dense_init(r[3], H * hd, D, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rms_norm_init(hd, dtype)
+        p["k_norm"] = nn.rms_norm_init(hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(p: Dict[str, Any], x: Array) -> Array:
+    g = nn.dense(p["gate"], x, "gate")
+    u = nn.dense(p["up"], x, "up")
+    h = dctx.constrain(jax.nn.silu(g) * u, "dp", None, "model")
+    return nn.dense(p["down"], h, "down")
+
+
+def swiglu_init(rng, d_model: int, d_ff: int, dtype=jnp.float32):
+    r = nn.split_rngs(rng, 3)
+    return {
+        "gate": nn.dense_init(r[0], d_model, d_ff, dtype=dtype),
+        "up": nn.dense_init(r[1], d_model, d_ff, dtype=dtype),
+        "down": nn.dense_init(r[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Dict[str, Any], x: Array) -> Array:
+    h = jax.nn.gelu(nn.dense(p["up"], x, "up"))
+    h = dctx.constrain(h, "dp", None, "model")
+    return nn.dense(p["down"], h, "down")
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.float32):
+    r = nn.split_rngs(rng, 2)
+    return {
+        "up": nn.dense_init(r[0], d_model, d_ff, dtype=dtype),
+        "down": nn.dense_init(r[1], d_ff, d_model, dtype=dtype),
+    }

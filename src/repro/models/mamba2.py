@@ -1,0 +1,212 @@
+"""Mamba2 block (SSD — state-space duality) with chunked parallel scan.
+
+Train/prefill use the chunked SSD form (intra-chunk quadratic attention-like
+term + inter-chunk state recurrence over chunks); decode is the O(1)
+recurrent update.  Both paths are validated against each other in tests.
+
+Shapes: d_inner = expand*d_model, heads H = d_inner/headdim P, state N.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from . import modules as nn
+
+Array = jax.Array
+
+
+class MambaCache(NamedTuple):
+    conv: Array    # (B, conv_w-1, conv_dim) — last inputs of the causal conv
+    ssm: Array     # (B, H, P, N) state
+    length: Array
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, H, conv_dim
+
+
+def init_mamba_cache(batch: int, cfg, dtype=jnp.bfloat16) -> MambaCache:
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, H, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mamba_init(rng, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    r = nn.split_rngs(rng, 4)
+    return {
+        "in_proj": nn.dense_init(
+            r[0], D, 2 * d_inner + 2 * cfg.ssm_state + H, dtype=dtype),
+        "conv_w": jax.random.normal(r[1], (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": nn.rms_norm_init(d_inner, dtype),
+        "out_proj": nn.dense_init(r[2], d_inner, D, dtype=dtype),
+    }
+
+
+def _split_in_proj(p, x, cfg):
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    zxbcdt = nn.dense(p["in_proj"], x, "in_proj")
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _conv_apply(p, seq):
+    """Causal depthwise conv along time. seq (B, T, C) already left-padded."""
+    w = p["conv_w"].astype(seq.dtype)      # (K, C)
+    K = w.shape[0]
+    out = sum(seq[:, i: seq.shape[1] - (K - 1) + i] * w[i][None, None, :]
+              for i in range(K))
+    return out + p["conv_b"].astype(seq.dtype)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD. x (B,T,H,P); dt (B,T,H); A (H,); Bm/Cm (B,T,N).
+
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    Recurrence: S_t = exp(dt_t A_h) S_{t-1} + dt_t x_t B_t^T ;  y_t = S_t C_t.
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,l,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                       # inclusive
+    total = cum[:, :, -1:, :]                          # (B,nc,1,H)
+
+    # intra-chunk: y_t += sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t.B_s) x_s
+    # (mask BEFORE exp: masked entries have ratio > 0 and would overflow,
+    # poisoning the cotangent of `where` with 0*inf = NaN)
+    ratio = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ratio = jnp.where(tri[None, None, :, :, None], ratio, -1e30)
+    decay = jnp.exp(ratio)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    w_ts = (cb[..., None] * decay * dtc[:, :, None, :, :]).astype(x.dtype)
+    y = jnp.einsum("bctsh,bcshp->bcthp", w_ts, xc,
+                   preferred_element_type=jnp.float32)
+
+    # chunk -> state contribution: sum_s exp(total - cum_s) dt_s B_s x_s^T
+    sdecay = (jnp.exp(total - cum) * dtc).astype(x.dtype)  # (B,nc,l,H)
+    chunk_state = jnp.einsum("bcsh,bcsn,bcshp->bchpn",
+                             sdecay, Bc, xc,
+                             preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over c
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def carry_fn(S, inputs):
+        cs, tot = inputs                                # (B,H,P,N), (B,H)
+        S_out = S                                       # state entering chunk
+        S = S * jnp.exp(tot)[:, :, None, None] + cs
+        return S, S_out
+
+    tot_c = jnp.moveaxis(total[:, :, 0, :], 1, 0)       # (nc,B,H)
+    cs_c = jnp.moveaxis(chunk_state, 1, 0)              # (nc,B,H,P,N)
+    final, S_in = jax.lax.scan(carry_fn, init_state, (cs_c, tot_c))
+    S_in = jnp.moveaxis(S_in, 0, 1)                     # (B,nc,H,P,N)
+
+    # carried-state term: y_t += exp(cum_t) C_t . S_in
+    y = y + jnp.einsum("bclh,bcln,bchpn->bclhp",
+                       jnp.exp(cum).astype(x.dtype), Cc,
+                       S_in.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+
+    y = y.reshape(Bsz, Tp, H, P)[:, :T]
+    return y, final
+
+
+def mamba_block(
+    p: Dict[str, Any],
+    x: Array,                      # (B, T, D)
+    cfg,
+    cache: Optional[MambaCache] = None,
+) -> Tuple[Array, Optional[MambaCache]]:
+    B, T, D = x.shape
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    P, N = cfg.ssm_headdim, cfg.ssm_state
+
+    z, xbc, dt_raw = _split_in_proj(p, x, cfg)
+    # channel-shard the conv/SSD activation stream over the TP axis
+    # (zamba params are FSDP-only, so without this every device holds the
+    # full (B,T,conv_dim) stream — 16x redundant HBM traffic).  The conv is
+    # depthwise, so each segment (x | B | C) convolves independently — that
+    # keeps every sharded tensor's slice boundaries aligned (no resharding
+    # collectives from slicing across shards).
+    z = dctx.constrain(z, "dp", None, "model")
+
+    if cache is not None:
+        left = cache.conv.astype(xbc.dtype)
+    else:
+        left = jnp.zeros((B, cfg.ssm_conv - 1, conv_dim), xbc.dtype)
+    seq = jnp.concatenate([left, xbc], axis=1)
+    new_conv = seq[:, -(cfg.ssm_conv - 1):] if cfg.ssm_conv > 1 else left
+
+    def conv_seg(lo, hi):
+        sub = {"conv_w": p["conv_w"][:, lo:hi], "conv_b": p["conv_b"][lo:hi]}
+        part = dctx.constrain(seq[..., lo:hi], "dp", None, "model")
+        return jax.nn.silu(_conv_apply(sub, part))
+
+    xs = conv_seg(0, d_inner).reshape(B, T, H, P)
+    xs = dctx.constrain(xs, "dp", None, "model", None)
+    Bm = conv_seg(d_inner, d_inner + N)
+    Cm = conv_seg(d_inner + N, conv_dim)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"])
+
+    if cache is not None and T == 1:
+        # O(1) recurrent decode step
+        S = cache.ssm
+        dA = jnp.exp(dt[:, 0] * A[None, :])            # (B,H)
+        dx = dt[:, 0, :, None] * xs[:, 0].astype(jnp.float32)   # (B,H,P)
+        S = S * dA[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", dx, Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", S, Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]                                  # (B,1,H,P)
+        final = S
+    else:
+        init = cache.ssm if cache is not None else None
+        y, final = _ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, init)
+
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = nn.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = nn.dense(p["out_proj"], y, "out_proj")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = MambaCache(conv=new_conv.astype(cache.conv.dtype),
+                               ssm=final, length=cache.length + T)
+    return out, new_cache

@@ -1,0 +1,162 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed-KV cache.
+
+Train/prefill: full expansion (q via low-rank down/up, k/v expanded from the
+shared 512-d latent).  Decode: the *absorbed* form — scores are taken
+directly against the latent cache (c_kv, k_pe), so the per-token cache cost
+is kv_lora + rope_head_dim (576 floats for the 236B config) instead of
+2*H*head_dim (32768): the paper-exact MLA memory win.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from . import modules as nn
+from .layers import NEG_INF, apply_rope, blocked_attention, rope_angles
+
+Array = jax.Array
+
+
+class MLACache(NamedTuple):
+    c_kv: Array     # (B, S_max, kv_lora)
+    k_pe: Array     # (B, S_max, rope_head_dim)
+    length: Array
+
+
+def init_mla_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        k_pe=jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mla_init(rng, cfg, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = nn.split_rngs(rng, 6)
+    return {
+        "q_down": nn.dense_init(r[0], D, cfg.q_lora, dtype=dtype),
+        "q_norm": nn.rms_norm_init(cfg.q_lora, dtype),
+        "q_up": nn.dense_init(r[1], cfg.q_lora, H * (dn + dr), dtype=dtype),
+        "kv_down": nn.dense_init(r[2], D, cfg.kv_lora + dr, dtype=dtype),
+        "kv_norm": nn.rms_norm_init(cfg.kv_lora, dtype),
+        "kv_up": nn.dense_init(r[3], cfg.kv_lora, H * (dn + dv), dtype=dtype),
+        "o": nn.dense_init(r[4], H * dv, D, dtype=dtype),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    cq = nn.rms_norm(p["q_norm"], nn.dense(p["q_down"], x, "q_down"), cfg.norm_eps)
+    q = nn.dense(p["q_up"], cq, "q_up").reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    return q_nope, q_pe
+
+
+def _latent_kv(p, x, cfg, positions):
+    ckv_full = nn.dense(p["kv_down"], x, "kv_down")
+    c_kv = nn.rms_norm(p["kv_norm"], ckv_full[..., : cfg.kv_lora], cfg.norm_eps)
+    k_pe = ckv_full[..., cfg.kv_lora:]
+    cos, sin = rope_angles(positions, cfg.rope_head_dim, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def mla_attention(
+    p: Dict[str, Any],
+    x: Array,
+    cfg,
+    cache: Optional[MLACache] = None,
+    positions: Optional[Array] = None,
+) -> Tuple[Array, Optional[MLACache]]:
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    if positions is None:
+        if cache is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        else:
+            positions = cache.length[:, None] + jnp.arange(S)[None, :]
+
+    q_nope, q_pe = _project_q(p, x, cfg, positions)
+    c_kv, k_pe = _latent_kv(p, x, cfg, positions)
+
+    if cache is not None:
+        new_len = cache.length + S
+        if S == 1:
+            brange = jnp.arange(B)
+            idx = cache.length
+            c_all = cache.c_kv.at[brange, idx].set(
+                c_kv[:, 0].astype(cache.c_kv.dtype))
+            pe_all = cache.k_pe.at[brange, idx].set(
+                k_pe[:, 0].astype(cache.k_pe.dtype))
+            new_cache = MLACache(c_all, pe_all, new_len)
+            out = _absorbed_decode(p, q_nope, q_pe, c_all, pe_all, new_len, cfg)
+            return nn.dense(p["o"], out.reshape(B, S, H * dv), "o"), new_cache
+        start = cache.length[0]
+        c_all = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, start, 0))
+        pe_all = jax.lax.dynamic_update_slice(
+            cache.k_pe, k_pe.astype(cache.k_pe.dtype), (0, start, 0))
+        new_cache = MLACache(c_all, pe_all, new_len)
+        c_kv, k_pe, kv_len, q_off = c_all, pe_all, new_len, start
+    else:
+        new_cache, kv_len, q_off = None, None, 0
+
+    # ---- expanded path (train / prefill) ------------------------------------
+    Skv = c_kv.shape[1]
+    kv = nn.dense(p["kv_up"], c_kv.astype(x.dtype), "kv_up").reshape(
+        B, Skv, H, dn + dv)
+    kv = dctx.constrain(kv, "dp", None, "model", None)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :].astype(x.dtype),
+                                  (B, Skv, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    q = dctx.constrain(q, "dp", None, "model", None)
+    k = dctx.constrain(k, "dp", None, "model", None)
+    v = dctx.constrain(v, "dp", None, "model", None)
+    out = blocked_attention(q, k, v, causal=True, q_offset=q_off,
+                            kv_len=kv_len, q_block=cfg.q_block,
+                            kv_block=cfg.kv_block,
+                            block_spec=("dp", "model", None, None, None))
+    return nn.dense(p["o"], out.reshape(B, S, H * dv), "o"), new_cache
+
+
+def _absorbed_decode(p, q_nope, q_pe, c_all, pe_all, kv_len, cfg):
+    """Decode against the latent cache without expanding K/V.
+
+    score(s) = (W_uk^T q_nope) . c_s + q_pe . k_pe_s
+    out      = W_uv^T-weighted latent context.
+    """
+    B, _, H, dn = q_nope.shape
+    dv = cfg.v_head_dim
+    kv_up = nn.materialize_kernel(p["kv_up"])        # (kv_lora, H*(dn+dv))
+    kv_up = kv_up.reshape(cfg.kv_lora, H, dn + dv)
+    w_uk, w_uv = kv_up[..., :dn], kv_up[..., dn:]
+
+    scale = (dn + cfg.rope_head_dim) ** -0.5
+    qf = q_nope[:, 0]
+    q_abs = jnp.einsum("bhd,lhd->bhl", qf, w_uk.astype(qf.dtype),
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhl,bsl->bhs", q_abs.astype(c_all.dtype), c_all,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_pe[:, 0].astype(pe_all.dtype),
+                       pe_all, preferred_element_type=jnp.float32)
+    s = s * scale
+    lim = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+    mask = jnp.arange(c_all.shape[1])[None, None, :] < lim[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", prob.astype(c_all.dtype), c_all,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhl,lhv->bhv", ctx.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    return out[:, None].astype(q_nope.dtype)  # (B,1,H,dv)

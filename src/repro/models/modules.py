@@ -1,0 +1,208 @@
+"""Minimal functional module system: named scopes, parameter initializers,
+calibration taps, and a quantization-aware dense primitive.
+
+Models are pure functions over nested-dict params.  Two cross-cutting
+concerns are threaded through module-level context:
+
+  * **Scopes** give every dense() call a stable path name ("layers.3.attn.q").
+    The same names key calibration Hessians and quantization stats.
+  * **Taps**: during (eager) calibration runs, dense() streams its input
+    activations into per-name Hessian accumulators (H += 2 x^T x) — the JAX
+    answer to torch forward hooks, memory-light because only the (in,in)
+    moment matrix is kept.
+  * **Quantized dispatch**: a params leaf may be a QuantizedTensor instead of
+    a dense kernel; dense() then routes through kernels.ops.qmatmul.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gptq
+from repro.core.quantized import QuantizedTensor
+
+Array = jax.Array
+
+_STATE = threading.local()
+
+
+def _scope_stack():
+    if not hasattr(_STATE, "scopes"):
+        _STATE.scopes = []
+    return _STATE.scopes
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    _scope_stack().append(str(name))
+    try:
+        yield
+    finally:
+        _scope_stack().pop()
+
+
+def current_scope() -> str:
+    return ".".join(_scope_stack())
+
+
+def scoped_name(name: str) -> str:
+    prefix = current_scope()
+    return f"{prefix}.{name}" if prefix else name
+
+
+# ---------------------------------------------------------------------------
+# Calibration taps
+# ---------------------------------------------------------------------------
+
+class TapCollector:
+    """Streams dense() inputs into per-matrix Hessian accumulators."""
+
+    def __init__(self):
+        self.hessians: Dict[str, gptq.HessianState] = {}
+
+    def record(self, name: str, x: Array):
+        in_dim = x.shape[-1]
+        st = self.hessians.get(name)
+        if st is None:
+            st = gptq.init_hessian(in_dim)
+        self.hessians[name] = gptq.accumulate_hessian(st, x)
+
+    def finalized(self) -> Dict[str, Array]:
+        return {k: gptq.finalize_hessian(v) for k, v in self.hessians.items()}
+
+
+@contextlib.contextmanager
+def collecting(collector: TapCollector):
+    prev = getattr(_STATE, "collector", None)
+    _STATE.collector = collector
+    try:
+        yield collector
+    finally:
+        _STATE.collector = prev
+
+
+def _maybe_record(name: str, x: Array):
+    col: Optional[TapCollector] = getattr(_STATE, "collector", None)
+    if col is not None and not isinstance(x, jax.core.Tracer):
+        col.record(name, x)
+
+
+def record_expert_inputs(name: str, x_e: Array):
+    """MoE calibration taps: x_e (G, E, cap, D) dispatched activations.
+    One Hessian per expert (tokens routed to it) — the activation-aware
+    compensation analogue for expert FFNs (DESIGN.md §3)."""
+    col: Optional[TapCollector] = getattr(_STATE, "collector", None)
+    if col is None or isinstance(x_e, jax.core.Tracer):
+        return
+    E = x_e.shape[1]
+    base = scoped_name(name)
+    for e in range(E):
+        col.record(f"{base}_{e}", x_e[:, e].reshape(-1, x_e.shape[-1]))
+
+
+# ---------------------------------------------------------------------------
+# Quantized-matmul runtime mode
+# ---------------------------------------------------------------------------
+
+class QuantMode:
+    """'ref' = XLA dequant+dot (CPU dry-run path); 'kernel' = Pallas kernel
+    (interpret=True off-TPU)."""
+    mode: str = "ref"
+    interpret: bool = True
+
+
+@contextlib.contextmanager
+def quant_mode(mode: str, interpret: bool = True):
+    prev = (QuantMode.mode, QuantMode.interpret)
+    QuantMode.mode, QuantMode.interpret = mode, interpret
+    try:
+        yield
+    finally:
+        QuantMode.mode, QuantMode.interpret = prev
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def dense(p: Dict[str, Any], x: Array, name: str = "dense") -> Array:
+    """y = x @ kernel (+ bias). kernel: (in, out) array or QuantizedTensor
+    in paper layout (out, in)."""
+    full = scoped_name(name)
+    kernel = p["kernel"]
+    if isinstance(kernel, QuantizedTensor):
+        from repro.kernels import ops as kops
+        y = kops.qmatmul(x, kernel,
+                         use_kernel=(QuantMode.mode == "kernel"),
+                         interpret=QuantMode.interpret)
+    else:
+        _maybe_record(full, x)
+        y = x @ kernel.astype(x.dtype)
+    b = p.get("bias")
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def materialize_kernel(p: Dict[str, Any]) -> Array:
+    """Kernel as a dense (in, out) array (dequantizing if quantized) — for
+    paths that need explicit weight access (e.g. MLA absorbed decode)."""
+    kernel = p["kernel"]
+    if isinstance(kernel, QuantizedTensor):
+        return kernel.dequantize(jnp.bfloat16).T
+    return kernel
+
+
+def rms_norm(p: Dict[str, Any], x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(p: Dict[str, Any], x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed(p: Dict[str, Any], tokens: Array) -> Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (host-side, explicit rngs)
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    if scale is None:
+        scale = in_dim ** -0.5
+    k = jax.random.normal(rng, (in_dim, out_dim), dtype) * scale
+    p = {"kernel": k}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def rms_norm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def layer_norm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32):
+    return {"embedding": jax.random.normal(rng, (vocab, dim), dtype) * 0.02}
+
+
+def split_rngs(rng, n: int):
+    return list(jax.random.split(rng, n))

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts MLP with capacity-bounded, shape-static dispatch.
+
+Token routing uses the group-local take/scatter-add formulation
+(GShard-style but gather-based, no (T,E,C) one-hot einsum): tokens are
+split into `moe_groups` groups (the launcher sets groups == DP shards so
+all dispatch math is shard-local); within a group, top-k assignments get
+positions via a cumsum over a (Tg*k, E) one-hot, assignments beyond the
+expert capacity are dropped, dispatch/combine are a take and a scatter-add.
+Expert FFNs run as stacked einsums so the expert axis shards over `model`
+(EP) — XLA inserts the all-to-all at the group<->expert boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from . import modules as nn
+
+Array = jax.Array
+
+
+def _expert_weight(w, dtype):
+    """Expert weights may be a stacked QuantizedTensor (leading E axis).
+
+    QuantizedTensors store paper layout (out, in); the expert einsums
+    consume (in, out), so dequantized weights are always swapped back."""
+    from repro.core.quantized import QuantizedTensor
+    if isinstance(w, QuantizedTensor):
+        deq = jax.vmap(lambda q: q.dequantize(dtype))(w)   # (E, out, in)
+        return jnp.swapaxes(deq, 1, 2)                     # (E, in, out)
+    return w.astype(dtype)
+
+
+def moe_init(rng, cfg, dtype=jnp.float32):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    r = nn.split_rngs(rng, 5)
+    s_in = D ** -0.5
+    s_hid = F ** -0.5
+    p = {
+        "router": nn.dense_init(r[0], D, E, dtype=jnp.float32),
+        "w_gate": jax.random.normal(r[1], (E, D, F), dtype) * s_in,
+        "w_up": jax.random.normal(r[2], (E, D, F), dtype) * s_in,
+        "w_down": jax.random.normal(r[3], (E, F, D), dtype) * s_hid,
+    }
+    if cfg.n_shared_experts > 0:
+        from .layers import swiglu_init
+        p["shared"] = swiglu_init(r[4], D, F * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_mlp(p: Dict[str, Any], x: Array, cfg) -> Tuple[Array, Array]:
+    """x (B, S, D) -> (y, aux_loss). Routing is per token, top_k experts."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = cfg.moe_groups
+    T = B * S
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    cap = int(-(-Tg * K // E) * cfg.capacity_factor)
+    cap = max(cap, 1)
+
+    xf = x.reshape(G, Tg, D)
+
+    logits = nn.dense(p["router"], xf.astype(jnp.float32), "router")  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                     # (G,Tg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- positions within each expert (group-local cumsum) ------------------
+    flat_e = gate_idx.reshape(G, Tg * K)                  # assignment -> expert
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (G, Tg*K, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1              # position per expert
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < cap                                      # capacity-dropped?
+
+    # ---- dispatch: (G, E, cap) slot -> source token ---------------------------
+    tok_ids = jnp.broadcast_to(
+        jnp.arange(Tg)[None, :, None], (G, Tg, K)).reshape(G, Tg * K)
+    slot = flat_e * cap + pos                             # (G, Tg*K)
+    slot = jnp.where(keep, slot, E * cap)                 # overflow -> sentinel
+    d_tok = jnp.full((G, E * cap + 1), Tg, jnp.int32)     # sentinel token id Tg
+    d_tok = jax.vmap(lambda d, s, t: d.at[s].set(t))(d_tok, slot, tok_ids)
+    d_tok = d_tok[:, : E * cap]                           # (G, E*cap)
+
+    x_pad = jnp.concatenate([xf, jnp.zeros((G, 1, D), xf.dtype)], axis=1)
+    dispatched = jnp.take_along_axis(
+        x_pad, d_tok[..., None], axis=1).reshape(G, E, cap, D)
+
+    # ---- expert FFN (E shards over `model`) ------------------------------------
+    # Two activation-sharding regimes (DESIGN.md §5):
+    #  * training / prefill (many tokens): tokens sharded over dp, expert
+    #    hidden replicated — the all-gather of activations amortizes;
+    #  * decode (few tokens): WEIGHT-STATIONARY — expert hidden F sharded
+    #    over dp to match the serve-mode weight sharding, so no expert
+    #    weight is ever gathered (57 GB/step/device for deepseek-v2).
+    nn.record_expert_inputs("expert_in", dispatched)
+    decode_like = x.shape[1] == 1
+    if decode_like:
+        dispatched = dctx.constrain(dispatched, None, "model", None, None)
+    else:
+        dispatched = dctx.constrain(dispatched, "dp", "model", None, None)
+    w_gate = _expert_weight(p["w_gate"], x.dtype)
+    w_up = _expert_weight(p["w_up"], x.dtype)
+    h_g = jnp.einsum("gecd,edf->gecf", dispatched, w_gate)
+    h_u = jnp.einsum("gecd,edf->gecf", dispatched, w_up)
+    h = jax.nn.silu(h_g) * h_u
+    h = (dctx.constrain(h, None, "model", None, "dp") if decode_like
+         else dctx.constrain(h, "dp", "model", None, None))
+    nn.record_expert_inputs("expert_mid", h)
+    out = jnp.einsum("gecf,efd->gecd", h,
+                     _expert_weight(p["w_down"], x.dtype))
+    out = (dctx.constrain(out, None, "model", None, None) if decode_like
+           else dctx.constrain(out, "dp", "model", None, None))
+
+    # ---- combine: scatter-add back to tokens, weighted by gates -----------------
+    gates_flat = jnp.where(keep, gate_vals.reshape(G, Tg * K), 0.0)
+    out_flat = out.reshape(G, E * cap, D)
+    src = jnp.take_along_axis(
+        out_flat, jnp.minimum(slot, E * cap - 1)[..., None], axis=1)
+    src = src * gates_flat[..., None].astype(out.dtype)
+    src = jnp.where(keep[..., None], src, 0.0)
+    y = jax.vmap(lambda acc, t, s: acc.at[t].add(s))(
+        jnp.zeros((G, Tg, D), out.dtype), tok_ids, src)
+    y = y.reshape(B, S, D)
+
+    # ---- shared experts + aux loss ------------------------------------------------
+    if "shared" in p:
+        from .layers import swiglu_mlp
+        with nn.scope("shared"):
+            y = y + swiglu_mlp(p["shared"], x)
+
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return y.astype(x.dtype), aux

@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent per-channel decay +
+squared-ReLU channel-mix.
+
+Train/prefill use a GLA-style chunked form of the WKV recurrence (log-space
+decay ratios inside a chunk, state carried across chunks); decode is the
+exact O(1) recurrence.  Chunked vs recurrent parity is tested.
+
+Recurrence (per head, key dim N, value dim N):
+    out_t = r_t . (S_{t-1} + (u ∘ k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(wlog_t)), wlog_t = bias + LoRA(x_t)   (data-dependent).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from . import modules as nn
+
+Array = jax.Array
+
+
+class RWKVCache(NamedTuple):
+    state: Array     # (B, H, N, N) wkv state
+    prev_tm: Array   # (B, D) last input of time-mix (token shift)
+    prev_cm: Array   # (B, D) last input of channel-mix
+    length: Array
+
+
+def rwkv_dims(cfg):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    return H, cfg.rwkv_head_dim
+
+
+def init_rwkv_cache(batch: int, cfg, dtype=jnp.bfloat16) -> RWKVCache:
+    H, N = rwkv_dims(cfg)
+    return RWKVCache(
+        state=jnp.zeros((batch, H, N, N), jnp.float32),
+        prev_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        prev_cm=jnp.zeros((batch, cfg.d_model), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def rwkv_init(rng, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    H, N = rwkv_dims(cfg)
+    r = nn.split_rngs(rng, 10)
+    return {
+        "tm": {
+            "mix": 0.5 * jnp.ones((5, D), jnp.float32),  # r,k,v,g,w shift mix
+            "r": nn.dense_init(r[0], D, D, dtype=dtype),
+            "k": nn.dense_init(r[1], D, D, dtype=dtype),
+            "v": nn.dense_init(r[2], D, D, dtype=dtype),
+            "g": nn.dense_init(r[3], D, D, dtype=dtype),
+            "w_lora_a": nn.dense_init(r[4], D, cfg.decay_lora, dtype=dtype),
+            "w_lora_b": nn.dense_init(r[5], cfg.decay_lora, D, dtype=dtype,
+                                      scale=0.01),
+            "w_bias": jnp.full((D,), -1.0, jnp.float32),
+            "u_bonus": jnp.zeros((H, N), jnp.float32),
+            "ln_x": nn.layer_norm_init(D),
+            "o": nn.dense_init(r[6], D, D, dtype=dtype),
+        },
+        "cm": {
+            "mix": 0.5 * jnp.ones((2, D), jnp.float32),  # k, r
+            "k": nn.dense_init(r[7], D, cfg.d_ff, dtype=dtype),
+            "v": nn.dense_init(r[8], cfg.d_ff, D, dtype=dtype),
+            "r": nn.dense_init(r[9], D, D, dtype=dtype),
+        },
+    }
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """shifted_t = x_{t-1} (prev for t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int, init_state=None):
+    """Chunked WKV. r,k,v (B,T,H,N); logw (B,T,H,N) = log decay (<0);
+    u (H,N). Returns (out (B,T,H,N), final_state (B,H,N,N))."""
+    B, T, H, N = r.shape
+    pad = (-T) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    shp = (B, nc, chunk, H, N)
+    rc, kc, vc, lw = (a.reshape(shp).astype(jnp.float32) for a in (r, k, v, logw))
+
+    cw = jnp.cumsum(lw, axis=2)                        # inclusive cumsum
+    cw_prev = cw - lw                                  # exclusive (cum_{t-1})
+    total = cw[:, :, -1]                               # (B,nc,H,N)
+
+    # intra-chunk: out_t += sum_{s<t} (r_t ∘ e^{cwprev_t - cw_s}).k_s v_s
+    r_t = rc * jnp.exp(cw_prev)
+    k_s = kc * jnp.exp(-cw)
+    att = jnp.einsum("bcthn,bcshn->bchts", r_t, k_s)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    out = jnp.einsum("bchts,bcshn->bcthn", att, vc)
+    # diagonal bonus term: (r_t ∘ u ∘ k_t) . v_t
+    diag = jnp.einsum("bcthn,hn,bcthn->bcth", rc, u.astype(jnp.float32), kc)
+    out = out + diag[..., None] * vc
+
+    # chunk state contribution: sum_s (k_s ∘ e^{total - cw_s}) v_s^T
+    k_dec = kc * jnp.exp(total[:, :, None] - cw)
+    chunk_state = jnp.einsum("bcshn,bcshm->bchnm", k_dec, vc)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def carry(S, inp):
+        cs, tot = inp                                  # (B,H,N,N), (B,H,N)
+        S_in = S
+        S = S * jnp.exp(tot)[..., None] + cs
+        return S, S_in
+
+    final, S_in = jax.lax.scan(
+        carry, init_state,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)                    # (B,nc,H,N,N)
+
+    # carried-state term: out_t += (r_t ∘ e^{cwprev_t}) . S_in
+    out = out + jnp.einsum("bcthn,bchnm->bcthm", r_t, S_in)
+    return out.reshape(B, Tp, H, N)[:, :T], final
+
+
+def time_mix(p, x, cfg, cache: Optional[RWKVCache] = None):
+    B, T, D = x.shape
+    H, N = rwkv_dims(cfg)
+    prev = cache.prev_tm if cache is not None else None
+    xs = _token_shift(x, prev)
+    mix = p["mix"]
+
+    def mixed(i):
+        m = mix[i][None, None, :].astype(x.dtype)
+        return x * m + xs * (1.0 - m)
+
+    r = nn.dense(p["r"], mixed(0), "r").reshape(B, T, H, N)
+    k = nn.dense(p["k"], mixed(1), "k").reshape(B, T, H, N)
+    v = nn.dense(p["v"], mixed(2), "v").reshape(B, T, H, N)
+    g = nn.dense(p["g"], mixed(3), "g")
+    wlog = (p["w_bias"][None, None, :].astype(jnp.float32)
+            + nn.dense(p["w_lora_b"],
+                       jnp.tanh(nn.dense(p["w_lora_a"], mixed(4), "w_lora_a")),
+                       "w_lora_b").astype(jnp.float32))
+    logw = -jnp.exp(wlog).reshape(B, T, H, N)          # log decay, < 0
+
+    r = dctx.constrain(r, "dp", None, "model", None)
+    k = dctx.constrain(k, "dp", None, "model", None)
+    v = dctx.constrain(v, "dp", None, "model", None)
+    logw = dctx.constrain(logw, "dp", None, "model", None)
+
+    if cache is not None and T == 1:
+        S = cache.state
+        r1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+        u = p["u_bonus"].astype(jnp.float32)
+        out = jnp.einsum("bhn,bhnm->bhm", r1, S) \
+            + jnp.einsum("bhn,hn,bhn,bhm->bhm", r1, u, k1, v1)
+        S = S * jnp.exp(logw[:, 0])[..., None] \
+            + jnp.einsum("bhn,bhm->bhnm", k1, v1)
+        out = out[:, None]
+        final = S
+    else:
+        init = cache.state if cache is not None else None
+        out, final = _wkv_chunked(r, k, v, logw, p["u_bonus"],
+                                  cfg.rwkv_chunk, init)
+
+    out = out.reshape(B, T, D).astype(x.dtype)
+    out = nn.layer_norm(p["ln_x"], out)
+    out = out * jax.nn.silu(g)
+    y = nn.dense(p["o"], out, "o")
+    return y, final, x[:, -1]
+
+
+def channel_mix(p, x, cache: Optional[RWKVCache] = None):
+    prev = cache.prev_cm if cache is not None else None
+    xs = _token_shift(x, prev)
+    mix = p["mix"]
+    xk = x * mix[0][None, None].astype(x.dtype) + xs * (1 - mix[0][None, None]).astype(x.dtype)
+    xr = x * mix[1][None, None].astype(x.dtype) + xs * (1 - mix[1][None, None]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(nn.dense(p["k"], xk, "k")))
+    k = dctx.constrain(k, "dp", None, "model")
+    y = jax.nn.sigmoid(nn.dense(p["r"], xr, "r")) * nn.dense(p["v"], k, "v")
+    return y, x[:, -1]
+
+
+# Layer assembly (pre-norm residual pattern around time_mix/channel_mix)
+# lives in transformer.py so norms/residuals are uniform across families.

@@ -1,0 +1,386 @@
+"""Decoder-LM assembly for all families (dense / moe / rwkv / hybrid).
+
+One config-driven implementation:
+  * layers stacked + `lax.scan` (fast compile at 64 layers, remat-friendly);
+    an unrolled eager mode (`unroll=True`) gives per-layer scope names for
+    calibration taps;
+  * caches are per-layer pytrees stacked along the layer axis and threaded
+    through the scan as xs/ys;
+  * hybrid (Zamba2-style) runs an outer unrolled loop over shared-attention
+    sites with inner scans over the Mamba2 trunk.
+
+Entry points: init_params, forward, lm_loss, init_cache, prefill, decode_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from . import modules as nn
+from . import layers as L
+from . import mla as mla_lib
+from . import moe as moe_lib
+from . import mamba2 as m2
+from . import rwkv6 as rwkv
+
+Array = jax.Array
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Per-family block init / apply
+# ---------------------------------------------------------------------------
+
+def _block_init(rng, cfg, dtype):
+    if cfg.family == "rwkv":
+        p = rwkv.rwkv_init(rng, cfg, dtype)
+        p["ln1"] = nn.layer_norm_init(cfg.d_model)
+        p["ln2"] = nn.layer_norm_init(cfg.d_model)
+        return p
+    if cfg.family == "hybrid":
+        p = m2.mamba_init(rng, cfg, dtype)
+        p["ln"] = nn.rms_norm_init(cfg.d_model)
+        return p
+    r1, r2 = jax.random.split(rng)
+    p = {"ln1": nn.rms_norm_init(cfg.d_model),
+         "ln2": nn.rms_norm_init(cfg.d_model)}
+    if cfg.use_mla:
+        p["attn"] = mla_lib.mla_init(r1, cfg, dtype)
+    else:
+        p["attn"] = L.attention_init(r1, cfg, dtype)
+    if cfg.family == "moe":
+        p["mlp"] = moe_lib.moe_init(r2, cfg, dtype)
+    elif cfg.mlp_type == "gelu":
+        p["mlp"] = L.gelu_mlp_init(r2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = L.swiglu_init(r2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _attn_block(p, x, cfg, cache):
+    h = nn.rms_norm(p["ln1"], x, cfg.norm_eps)
+    with nn.scope("attn"):
+        if cfg.use_mla:
+            a, new_cache = mla_lib.mla_attention(p["attn"], h, cfg, cache)
+        else:
+            a, new_cache = L.gqa_attention(p["attn"], h, cfg, cache)
+    x = x + a
+    h = nn.rms_norm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    with nn.scope("mlp"):
+        if cfg.family == "moe":
+            m, aux = moe_lib.moe_mlp(p["mlp"], h, cfg)
+        elif cfg.mlp_type == "gelu":
+            m = L.gelu_mlp(p["mlp"], h)
+        else:
+            m = L.swiglu_mlp(p["mlp"], h)
+    return x + m, new_cache, aux
+
+
+def _rwkv_block(p, x, cfg, cache):
+    h = nn.layer_norm(p["ln1"], x, cfg.norm_eps)
+    with nn.scope("tm"):
+        a, state, last_tm = rwkv.time_mix(p["tm"], h, cfg, cache)
+    x = x + a
+    h2 = nn.layer_norm(p["ln2"], x, cfg.norm_eps)
+    with nn.scope("cm"):
+        c, last_cm = rwkv.channel_mix(p["cm"], h2, cache)
+    x = x + c
+    new_cache = None
+    if cache is not None:
+        T = h.shape[1]
+        new_cache = rwkv.RWKVCache(state=state,
+                                   prev_tm=last_tm.astype(cache.prev_tm.dtype),
+                                   prev_cm=last_cm.astype(cache.prev_cm.dtype),
+                                   length=cache.length + T)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _mamba_layer(p, x, cfg, cache):
+    h = nn.rms_norm(p["ln"], x, cfg.norm_eps)
+    with nn.scope("mamba"):
+        m, new_cache = m2.mamba_block(p, h, cfg, cache)
+    return x + m, new_cache, jnp.zeros((), jnp.float32)
+
+
+def block_apply(p, x, cfg, cache=None):
+    x = dctx.constrain(x, "dp", None, None)
+    if cfg.family == "rwkv":
+        out = _rwkv_block(p, x, cfg, cache)
+    elif cfg.family == "hybrid":
+        out = _mamba_layer(p, x, cfg, cache)
+    else:
+        out = _attn_block(p, x, cfg, cache)
+    return (dctx.constrain(out[0], "dp", None, None),) + out[1:]
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    r_embed, r_blocks, r_head, r_site = jax.random.split(rng, 4)
+    rngs = jax.random.split(r_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda r: _block_init(r, cfg, dtype))(rngs)
+    params = {
+        "embed": nn.embed_init(r_embed, cfg.vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": (nn.layer_norm_init(cfg.d_model)
+                       if cfg.family == "rwkv"
+                       else nn.rms_norm_init(cfg.d_model)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(r_head, cfg.d_model, cfg.vocab,
+                                          dtype=dtype)
+    if cfg.family == "hybrid" and cfg.attn_every > 0:
+        # one shared transformer block (attn+MLP) + per-site LoRA deltas
+        rs = jax.random.split(r_site, cfg.n_sites + 2)
+        params["shared_attn"] = L.attention_init(rs[0], cfg, dtype)
+        params["shared_attn"]["ln"] = nn.rms_norm_init(cfg.d_model)
+        params["shared_attn"]["ln2"] = nn.rms_norm_init(cfg.d_model)
+        params["shared_attn"]["mlp"] = L.swiglu_init(
+            rs[-1], cfg.d_model, cfg.d_ff, dtype)
+        lora_r = 32
+        H, KH, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+
+        def site_init(r):
+            ra, rb = jax.random.split(r)
+            return {
+                "lora_a": jax.random.normal(ra, (D, lora_r), dtype) * (D ** -0.5),
+                "lora_b": jax.random.normal(rb, (lora_r, H * hd), dtype) * 0.01,
+            }
+        params["site_lora"] = jax.vmap(site_init)(
+            jnp.stack(jax.random.split(rs[1], cfg.n_sites)))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _run_blocks(params, x, cfg, caches, unroll: bool):
+    """Apply all layers; returns (x, new_caches, aux_sum)."""
+    blocks = params["blocks"]
+
+    if cfg.family == "hybrid" and cfg.attn_every > 0:
+        return _run_hybrid(params, x, cfg, caches, unroll)
+
+    if unroll or not cfg.scan_layers:
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_layers = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], blocks)
+            c_i = (None if caches is None
+                   else jax.tree_util.tree_map(lambda a: a[i], caches))
+            with nn.scope(f"layers.{i}"):
+                x, c_new, aux = block_apply(p_i, x, cfg, c_i)
+            aux_sum = aux_sum + aux
+            if caches is not None:
+                new_layers.append(c_new)
+        new_caches = None
+        if caches is not None:
+            new_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_layers)
+        return x, new_caches, aux_sum
+
+    if caches is None:
+        def body(carry, p_i):
+            h, aux_sum = carry
+            h, _, aux = block_apply(p_i, h, cfg, None)
+            return (h, aux_sum + aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_sum), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), blocks)
+        return x, None, aux_sum
+
+    # Serving path: caches ride in the scan CARRY, not xs/ys — XLA aliases
+    # while-loop carries in place, so each layer's update writes only its
+    # own slice instead of copying the whole multi-GB cache between the
+    # xs and ys buffers every step (§Perf iteration: ~4x decode HBM traffic).
+    def body(carry, p_i):
+        h, aux_sum, all_caches, li = carry
+        c_i = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
+            all_caches)
+        h, c_new, aux = block_apply(p_i, h, cfg, c_i)
+        all_caches = jax.tree_util.tree_map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, li, 0),
+            all_caches, c_new)
+        return (h, aux_sum + aux, all_caches, li + 1), None
+
+    (x, aux_sum, new_caches, _), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), caches, jnp.int32(0)), blocks)
+    return x, new_caches, aux_sum
+
+
+def _shared_attention(params, x, cfg, site: int, cache):
+    """Zamba2-style shared transformer block with per-site LoRA delta."""
+    sp = params["shared_attn"]
+    h = nn.rms_norm(sp["ln"], x, cfg.norm_eps)
+    lora = jax.tree_util.tree_map(lambda a: a[site], params["site_lora"])
+    with nn.scope(f"shared_attn.site{site}"):
+        out, new_cache = L.gqa_attention(sp, h, cfg, cache)
+        delta = (h @ lora["lora_a"].astype(h.dtype)) @ lora["lora_b"].astype(h.dtype)
+        # LoRA delta folded into the attention output projection input
+        out = out + nn.dense(sp["o"], delta, "o_lora")
+        x = x + out
+        h2 = nn.rms_norm(sp["ln2"], x, cfg.norm_eps)
+        x = x + L.swiglu_mlp(sp["mlp"], h2)
+    return x, new_cache
+
+
+def _run_hybrid(params, x, cfg, caches, unroll: bool):
+    """attn_every-layer Mamba2 segments with a shared attention site before
+    each segment.  caches: {'mamba': stacked(L), 'attn': stacked(n_sites)}."""
+    n_sites = cfg.n_sites
+    per = cfg.attn_every
+    blocks = params["blocks"]
+    aux_sum = jnp.zeros((), jnp.float32)
+    m_caches = caches["mamba"] if caches is not None else None
+    a_caches = caches["attn"] if caches is not None else None
+    new_m, new_a = [], []
+
+    for site in range(n_sites):
+        a_c = (None if a_caches is None
+               else jax.tree_util.tree_map(lambda a: a[site], a_caches))
+        x, a_new = _shared_attention(params, x, cfg, site, a_c)
+        if a_caches is not None:
+            new_a.append(a_new)
+        lo, hi = site * per, min((site + 1) * per, cfg.n_layers)
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], blocks)
+        seg_c = (None if m_caches is None
+                 else jax.tree_util.tree_map(lambda a: a[lo:hi], m_caches))
+        if unroll or not cfg.scan_layers:
+            for j in range(hi - lo):
+                p_i = jax.tree_util.tree_map(lambda a: a[j], seg)
+                c_i = (None if seg_c is None
+                       else jax.tree_util.tree_map(lambda a: a[j], seg_c))
+                with nn.scope(f"layers.{lo + j}"):
+                    x, c_new, aux = block_apply(p_i, x, cfg, c_i)
+                aux_sum = aux_sum + aux
+                if seg_c is not None:
+                    new_m.append(c_new)
+        else:
+            def body(carry, xs):
+                h = carry
+                p_i, c_i = xs
+                h, c_new, _ = block_apply(p_i, h, cfg, c_i)
+                return h, c_new
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, seg_new = jax.lax.scan(body, x, (seg, seg_c))
+            if m_caches is not None:
+                new_m.append(seg_new)
+
+    new_caches = None
+    if caches is not None:
+        if unroll or not cfg.scan_layers:
+            mstack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m)
+        else:
+            mstack = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_m)
+        astack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_a)
+        new_caches = {"mamba": mstack, "attn": astack}
+    return x, new_caches, aux_sum
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg,
+    tokens: Optional[Array] = None,        # (B, S) int32
+    prefix_embeds: Optional[Array] = None,  # (B, P, D) modality stub
+    caches=None,
+    unroll: bool = False,
+) -> Tuple[Array, Any, Array]:
+    """Returns (logits (B, S_total, V), new_caches, aux_loss)."""
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds.astype(_dtype(cfg)))
+    if tokens is not None:
+        parts.append(nn.embed(params["embed"], tokens))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+    x, new_caches, aux = _run_blocks(params, x, cfg, caches, unroll)
+    x = (nn.layer_norm(params["final_norm"], x, cfg.norm_eps)
+         if cfg.family == "rwkv"
+         else nn.rms_norm(params["final_norm"], x, cfg.norm_eps))
+    if cfg.tie_embeddings:
+        nn._maybe_record("lm_head", x)
+        logits = x @ params["embed"]["embedding"].astype(x.dtype).T
+    else:
+        logits = nn.dense(params["lm_head"], x, "lm_head")
+    logits = dctx.constrain(logits, "dp", None, "model")
+    return logits, new_caches, aux
+
+
+def lm_loss(params, cfg, batch: Dict[str, Array], unroll: bool = False):
+    """Next-token loss. batch: tokens (B,S) [+ prefix_embeds (B,P,D)]."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    logits, _, aux = forward(params, cfg, tokens, prefix, unroll=unroll)
+    P = 0 if prefix is None else prefix.shape[1]
+    logits_t = logits[:, P:-1].astype(jnp.float32)      # predict tokens[1:]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits_t, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        loss = nll.mean()
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L_ = cfg.n_layers
+
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+
+    if cfg.family == "rwkv":
+        return stack(lambda: rwkv.init_rwkv_cache(batch, cfg, dtype), L_)
+    if cfg.family == "hybrid":
+        window = cfg.attn_window or max_len
+        attn_len = min(max_len, window)
+        return {
+            "mamba": stack(lambda: m2.init_mamba_cache(batch, cfg, dtype), L_),
+            "attn": stack(lambda: L.init_kv_cache(
+                batch, attn_len, cfg.n_kv_heads, cfg.head_dim, dtype),
+                cfg.n_sites),
+        }
+    if cfg.use_mla:
+        return stack(lambda: mla_lib.init_mla_cache(batch, max_len, cfg, dtype), L_)
+    return stack(lambda: L.init_kv_cache(
+        batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype), L_)
+
+
+def prefill(params, cfg, tokens, caches, prefix_embeds=None, unroll=False):
+    logits, caches, _ = forward(params, cfg, tokens, prefix_embeds,
+                                caches=caches, unroll=unroll)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg, token: Array, caches, unroll: bool = False):
+    """token (B,) or (B,1) -> (logits (B,V), new caches)."""
+    if token.ndim == 1:
+        token = token[:, None]
+    logits, caches, _ = forward(params, cfg, token, caches=caches,
+                                unroll=unroll)
+    return logits[:, -1], caches

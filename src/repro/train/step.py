@@ -1,0 +1,65 @@
+"""train_step factory: loss -> grads -> (clipped, scheduled) AdamW update,
+with optional microbatch gradient accumulation (compute/comm overlap: XLA
+overlaps the reduce-scatter of microbatch i with compute of i+1)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.optim.adamw import OptimConfig, OptState, apply_updates
+
+Array = jax.Array
+
+
+def make_train_step(cfg, optim_cfg: OptimConfig, n_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch leaves have leading dim global_batch; with n_microbatches > 1 the
+    batch is split on axis 0 and gradients are accumulated in f32.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss_fn(params, cfg, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def split(x):
+            return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                             + x.shape[1:])
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_sum + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree_util.tree_map(lambda a: a / n_microbatches, acc)
+        return loss_sum / n_microbatches, {}, grads
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, Array]):
+        if n_microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, optim_cfg)
+        out = {"loss": loss, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step

@@ -1,0 +1,154 @@
+"""Distribution tests (8 forced host devices via subprocess — the main
+process keeps 1 device per the dry-run contract): row-sharded quantizer
+parity, compressed DP all-reduce, small-mesh lower+compile, HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.hlo_analysis import analyze_hlo
+
+
+def test_hlo_analyzer_counts_loops_exactly():
+    def g(x):
+        def inner(c, _):
+            return c @ x, None
+        c, _ = jax.lax.scan(inner, x, None, length=3)
+        return c
+    compiled = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    res = analyze_hlo(compiled.as_text())
+    assert res["flops"] == 3 * 2 * 64 ** 3
+
+
+def test_hlo_analyzer_nested_loops():
+    def g(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ x, None
+            return jax.lax.scan(inner, c, None, length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+    compiled = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    res = analyze_hlo(compiled.as_text())
+    assert res["flops"] == 20 * 2 * 32 ** 3
+
+
+def test_rowsharded_quantizer_matches_single_device(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CLAQConfig, quantize_matrix
+rng = np.random.default_rng(0)
+W = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+X = rng.normal(size=(256, 64)).astype(np.float32)
+H = jnp.asarray(2 * X.T @ X)
+cfg = CLAQConfig(bits=3, method="kmeans", kmeans_iters=5, gptq_blocksize=32)
+qt1, Q1, st1 = quantize_matrix(W, H, cfg)
+mesh = jax.make_mesh((8,), ("model",))
+qt8, Q8, st8 = quantize_matrix(W, H, cfg, mesh=mesh, shard_axis="model")
+np.testing.assert_allclose(np.asarray(Q1), np.asarray(Q8), rtol=1e-4, atol=1e-5)
+assert abs(st1.proxy_loss - st8.proxy_loss) / max(st1.proxy_loss, 1e-9) < 1e-3
+print("rowsharded parity OK")
+""")
+
+
+def test_compressed_psum_error_feedback(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim import compressed_psum
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+gs = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+err0 = jnp.zeros((8, 32), jnp.float32)
+
+def body(g, e):
+    out, new_e = compressed_psum({"g": g}, {"g": e}, "data")
+    return out["g"], new_e["g"]
+
+fn = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                   out_specs=(P("data"), P("data")), check_vma=False)
+out, err = fn(gs, err0)
+true_mean = np.asarray(gs).mean(axis=0)
+# every shard holds the same compressed mean, error bounded by int8 step
+got = np.asarray(out)
+for i in range(8):
+    assert np.allclose(got[i], got[0])
+scale = np.abs(np.asarray(gs)).max() / 127
+assert np.max(np.abs(got[0] - true_mean)) <= scale + 1e-6
+# error feedback: residual equals what compression dropped
+assert np.max(np.abs(np.asarray(err))) <= scale + 1e-6
+print("compressed psum OK")
+""")
+
+
+def test_small_mesh_dryrun_lower_compile(subproc):
+    """The dry-run path end-to-end on a 2x4 debug mesh with a smoke config:
+    proves the sharding rules + constraints lower on multi-device."""
+    subproc("""
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_smoke_config, SHAPES_BY_NAME
+from repro.dist import sharding as shd, context as dctx
+from repro.models import api
+from repro.optim import OptimConfig, OptState, init_opt_state
+from repro.train import make_train_step
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = dataclasses.replace(get_smoke_config("llama1_7b"),
+                          d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                          d_ff=128, vocab=256)
+param_sds = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+params = shd.with_shardings(param_sds, shd.spec_for_param, cfg, mesh)
+ocfg = OptimConfig()
+opt_sds = jax.eval_shape(lambda p: init_opt_state(p, ocfg), param_sds)
+opt = OptState(
+    m=shd.with_shardings(opt_sds.m, shd.spec_for_param, cfg, mesh),
+    v=shd.with_shardings(opt_sds.v, shd.spec_for_param, cfg, mesh),
+    step=jax.ShapeDtypeStruct((), jnp.int32,
+        sharding=jax.NamedSharding(mesh, jax.sharding.PartitionSpec())),
+    err=None)
+batch = shd.with_shardings({"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)},
+                           shd.spec_for_batch, cfg, mesh)
+with mesh, dctx.use_mesh(mesh):
+    step = make_train_step(cfg, ocfg)
+    compiled = jax.jit(step).lower(params, opt, batch).compile()
+assert compiled.memory_analysis() is not None
+print("small-mesh dryrun OK")
+""")
+
+
+def test_multi_device_train_step_runs(subproc):
+    """Actually EXECUTE a sharded train step on 8 devices (not just lower)
+    and check the loss matches the single-device value."""
+    subproc("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.dist import sharding as shd, context as dctx
+from repro.models import api
+from repro.optim import OptimConfig, init_opt_state
+from repro.train import make_train_step
+from repro.data import DataConfig, SyntheticCorpus
+
+cfg = dataclasses.replace(get_smoke_config("llama1_7b"),
+                          d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                          d_ff=128, vocab=256, dtype="float32")
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+ocfg = OptimConfig(lr=1e-2, warmup_steps=1, total_steps=10)
+opt = init_opt_state(params, ocfg)
+data = SyntheticCorpus(DataConfig(vocab=256, seq_len=32, batch=8, seed=0))
+batch = {"tokens": data.batch_at(0)}
+
+step = jax.jit(make_train_step(cfg, ocfg))
+_, _, m_single = step(params, opt, batch)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+pshard = shd.tree_shardings(params, shd.spec_for_param, cfg, mesh)
+params_d = jax.device_put(params, pshard)
+opt_d = init_opt_state(params_d, ocfg)
+with mesh, dctx.use_mesh(mesh):
+    stepd = jax.jit(make_train_step(cfg, ocfg))
+    _, _, m_multi = stepd(params_d, opt_d, batch)
+assert abs(float(m_single["loss"]) - float(m_multi["loss"])) < 1e-3, (
+    float(m_single["loss"]), float(m_multi["loss"]))
+print("multi-device execution OK", float(m_multi["loss"]))
+""", devices=8, timeout=600)

@@ -1,0 +1,105 @@
+"""Property tests for the 1-D K-Means codebook solver (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kmeans as km
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_column(seed, n, heavy=False):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    if heavy:
+        x[: n // 10] *= 8.0
+    return jnp.asarray(x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(16, 300),
+       bits=st.sampled_from([1, 2, 3, 4]))
+def test_codes_in_range_and_centroids_sorted(seed, n, bits):
+    x = _rand_column(seed, n)
+    k = 2 ** bits
+    cb, codes = km.kmeans_1d(x, k_max=k, iters=5)
+    assert codes.shape == x.shape
+    assert int(codes.min()) >= 0 and int(codes.max()) < k
+    finite = np.asarray(cb)[np.isfinite(np.asarray(cb))]
+    assert np.all(np.diff(finite) >= -1e-6)
+    assert finite.min() >= float(x.min()) - 1e-5
+    assert finite.max() <= float(x.max()) + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(32, 200))
+def test_more_bits_less_error(seed, n):
+    x = _rand_column(seed, n, heavy=True)
+    errs = []
+    for bits in (1, 2, 3, 4):
+        cb, codes = km.kmeans_1d(x, k_max=2 ** bits, iters=8)
+        q = jnp.where(jnp.isfinite(cb), cb, 0.0)[codes]
+        errs.append(float(jnp.sum((x - q) ** 2)))
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_exact_when_few_unique_values(seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=4).astype(np.float32)
+    x = jnp.asarray(rng.choice(vals, size=128))
+    cb, codes = km.kmeans_1d(x, k_max=8, iters=20)
+    q = jnp.where(jnp.isfinite(cb), cb, 0.0)[codes]
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_lloyd_iterations_do_not_increase_inertia(seed):
+    x = _rand_column(seed, 128, heavy=True)
+    prev = None
+    for iters in (1, 3, 6, 12):
+        cb, _ = km.kmeans_1d(x, k_max=8, iters=iters)
+        inert = float(km.inertia(x, cb))
+        if prev is not None:
+            assert inert <= prev + 1e-4
+        prev = inert
+
+
+def test_kmeans_beats_uniform_grid_on_heavy_tails():
+    """The paper's core claim for §3.1: K-Means codebooks fit the weight
+    distribution better than a uniform min-max grid."""
+    x = _rand_column(7, 4096, heavy=True)
+    k = 8
+    cb, codes = km.kmeans_1d(x, k_max=k, iters=10)
+    err_km = float(km.inertia(x, cb))
+    grid = jnp.linspace(float(x.min()), float(x.max()), k)
+    err_uniform = float(km.inertia(x, grid))
+    assert err_km < err_uniform * 0.8
+
+
+def test_weight_zero_elements_are_excluded():
+    x = jnp.concatenate([jnp.linspace(-1, 1, 64), jnp.asarray([100.0])])
+    w = jnp.concatenate([jnp.ones(64), jnp.zeros(1)])
+    cb, _ = km.kmeans_1d(x, k_max=4, iters=10, weight=w)
+    finite = np.asarray(cb)[np.isfinite(np.asarray(cb))]
+    assert finite.max() < 2.0  # outlier did not drag any centroid
+
+
+def test_dynamic_k_valid():
+    x = _rand_column(3, 256)
+    cb4, _ = km.kmeans_1d(x, k_max=16, k_valid=4, iters=8)
+    n_finite = int(np.isfinite(np.asarray(cb4)).sum())
+    assert n_finite == 4
+
+
+def test_kmeans_columns_matches_single():
+    W = jnp.stack([_rand_column(i, 96) for i in range(5)], axis=1)
+    cbs, codes = km.kmeans_columns(W, k_max=8, iters=6)
+    for j in range(5):
+        cb1, codes1 = km.kmeans_1d(W[:, j], k_max=8, iters=6)
+        np.testing.assert_allclose(np.asarray(cbs[j]), np.asarray(cb1),
+                                   rtol=1e-5, atol=1e-6)

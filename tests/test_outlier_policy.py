@@ -1,0 +1,79 @@
+"""Outlier Order metric (§3.2) and AP/OR budget policies (§3.3/3.4)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import outlier, policy
+
+
+def test_outlier_ratio_matches_numpy():
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(64, 32)).astype(np.float32)
+    W[:8, 3] *= 50
+    S = 5.0
+    R = np.asarray(outlier.outlier_ratio(jnp.asarray(W), S))
+    thresh = S * np.abs(W).mean()
+    R_np = (np.abs(W) > thresh).mean(axis=0)
+    np.testing.assert_allclose(R, R_np, atol=1e-6)
+    assert R[3] == R.max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(cols=st.integers(8, 200), frac=st.floats(0.01, 0.6),
+       seed=st.integers(0, 999))
+def test_top_fraction_exact_count(cols, frac, seed):
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.random(cols).astype(np.float32))
+    mask = outlier.top_fraction_mask(R, frac)
+    assert int(mask.sum()) == int(round(frac * cols))
+
+
+def test_topk_per_column_mask():
+    rng = np.random.default_rng(1)
+    W = rng.normal(size=(40, 6)).astype(np.float32)
+    counts = jnp.asarray([0, 1, 3, 5, 0, 2], jnp.int32)
+    mask = np.asarray(outlier.topk_per_column_mask(jnp.asarray(W), counts))
+    assert np.array_equal(mask.sum(axis=0), np.asarray(counts))
+    for j in range(6):
+        k = int(counts[j])
+        if k:
+            sel = np.abs(W[:, j])[mask[:, j]]
+            rest = np.abs(W[:, j])[~mask[:, j]]
+            assert sel.min() >= rest.max() - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(cols=st.integers(16, 256), target=st.floats(2.05, 3.95),
+       seed=st.integers(0, 999))
+def test_ap_budget(cols, target, seed):
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.random(cols).astype(np.float32))
+    bits, achieved = policy.ap_column_bits(
+        R, policy.APConfig(target_bits=target, p_lo=2, p_hi=4))
+    assert set(np.unique(np.asarray(bits))) <= {2, 4}
+    assert abs(achieved - target) <= 2.0 / cols + 1e-6
+    assert abs(float(jnp.mean(bits.astype(jnp.float32))) - achieved) < 1e-6
+    # high-precision columns are exactly the top-R ones
+    n_hi = int((np.asarray(bits) == 4).sum())
+    if 0 < n_hi < cols:
+        thresh = np.sort(np.asarray(R))[::-1][n_hi - 1]
+        assert np.all(np.asarray(R)[np.asarray(bits) == 4] >= thresh - 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(64, 512), cols=st.integers(16, 128),
+       extra=st.floats(0.05, 0.3), seed=st.integers(0, 999))
+def test_or_budget(rows, cols, extra, seed):
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.random(cols).astype(np.float32))
+    counts, achieved = policy.or_reserve_counts(
+        R, rows, policy.ORConfig(extra_bits=extra))
+    total_bits = float(counts.sum()) * policy.BITS_PER_RESERVED_OUTLIER
+    assert abs(total_bits / (rows * cols) - achieved) < 1e-6
+    # rounding granularity: up to 0.5 outlier/column in each class
+    assert achieved <= extra + 0.5 * policy.BITS_PER_RESERVED_OUTLIER / rows + 1e-6
+    assert int(counts.max()) <= rows
+    # top columns get at least as many reservations
+    order = np.argsort(-np.asarray(R))
+    c = np.asarray(counts)[order]
+    assert c[0] >= c[-1]

@@ -1,0 +1,41 @@
+"""Bit-packing roundtrip properties (incl. the 3-bit two-plane scheme)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([1, 2, 3, 4, 8]),
+       rows=st.integers(1, 130), cols=st.integers(1, 9),
+       seed=st.integers(0, 10_000))
+def test_roundtrip(bits, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, size=(rows, cols)).astype(np.int32)
+    packed = packing.pack_codes(jnp.asarray(codes), bits)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (packing.packed_rows(rows, bits), cols)
+    out = packing.unpack_codes(packed, bits, rows)
+    assert np.array_equal(np.asarray(out), codes)
+
+
+def test_storage_is_exact_bits():
+    # 3-bit = exactly 3 bits/element via bit-planes (not 3.2 like 10-in-32)
+    for bits in (1, 2, 3, 4, 8):
+        assert packing.storage_bits_per_element(bits) == float(bits)
+        rows = 320
+        assert packing.packed_rows(rows, bits) * 32 == rows * bits
+
+
+def test_split_planes_consistent():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 8, size=(64, 3)).astype(np.int32)
+    packed = packing.pack_codes(jnp.asarray(codes), 3)
+    lo, hi = packing.split_planes(packed, 3, 64)
+    assert lo.shape == (64 // 16, 3)
+    assert hi.shape == (64 // 32, 3)
+    lo_codes = packing._unpack_plane(lo, 2, 64)
+    hi_codes = packing._unpack_plane(hi, 1, 64)
+    recon = np.asarray(lo_codes) | (np.asarray(hi_codes) << 2)
+    assert np.array_equal(recon, codes)

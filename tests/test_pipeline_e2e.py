@@ -1,0 +1,131 @@
+"""End-to-end system behaviour: train a small LM, calibrate, CLAQ-quantize,
+and reproduce the paper's orderings (Tables 1/3/4 trend-level); quantized
+serving equals quantized evaluation; heuristic AP search (App. G)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import APConfig, CLAQConfig, MatrixInfo, ORConfig
+from repro.core.search import heuristic_ap_search
+from repro.data import DataConfig, SyntheticCorpus, calibration_set
+from repro.launch.quantize import calibrate, quantize_model_params
+from repro.models import api
+from repro.optim import OptimConfig, init_opt_state
+from repro.train import make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=256,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = OptimConfig(lr=1e-2, warmup_steps=5, total_steps=80)
+    opt = init_opt_state(params, ocfg)
+    data = SyntheticCorpus(DataConfig(vocab=256, seq_len=64, batch=8, seed=0))
+    step = jax.jit(make_train_step(cfg, ocfg))
+    for s in range(60):
+        params, opt, _ = step(params, opt, {"tokens": data.batch_at(s)})
+    calib = calibration_set(vocab=256, n_segments=8, seq_len=64)
+    hess = calibrate(params, cfg, calib, batch_size=4)
+    eval_batch = {"tokens": data.batch_at(1000)}
+    return cfg, params, hess, eval_batch
+
+
+def _ppl(cfg, params, batch):
+    _, met = jax.jit(lambda p, b: api.loss_fn(p, cfg, b))(params, batch)
+    return float(jnp.exp(met["nll"]))
+
+
+def test_tap_names_cover_all_block_matrices(trained):
+    cfg, params, hess, _ = trained
+    for i in range(cfg.n_layers):
+        for name in ("attn.q", "attn.k", "attn.v", "attn.o",
+                     "mlp.gate", "mlp.up", "mlp.down"):
+            assert f"layers.{i}.{name}" in hess
+
+
+def test_paper_orderings(trained):
+    cfg, params, hess, eval_batch = trained
+    ppl_fp = _ppl(cfg, params, eval_batch)
+
+    def q(qcfg):
+        qp, rep = quantize_model_params(params, cfg, hess, qcfg)
+        return _ppl(cfg, qp, eval_batch), rep
+
+    ppl_claq3, _ = q(CLAQConfig(bits=3, method="kmeans", kmeans_iters=6,
+                                gptq_blocksize=32))
+    ppl_gptq3, _ = q(CLAQConfig(bits=3, method="uniform", gptq_blocksize=32))
+    ppl_claq2, _ = q(CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                                gptq_blocksize=32))
+    ppl_fusion, rep = q(CLAQConfig(bits=2, method="kmeans", kmeans_iters=6,
+                                   gptq_blocksize=32,
+                                   ap=APConfig(2.2, 2, 4),
+                                   orr=ORConfig(0.1)))
+    # Table 1 trend: fp <= CLAQ <= GPTQ at 3-bit
+    assert ppl_fp <= ppl_claq3 * 1.001
+    assert ppl_claq3 <= ppl_gptq3 * 1.05
+    # fusion beats pure 2-bit (Tables 3/4 trend)
+    assert ppl_fusion < ppl_claq2
+    assert 2.0 < rep.mean_effective_bits < 2.6
+
+
+def test_quantized_serving_matches_quantized_eval(trained):
+    cfg, params, hess, _ = trained
+    qp, _ = quantize_model_params(
+        params, cfg, hess, CLAQConfig(bits=4, method="kmeans",
+                                      kmeans_iters=5, gptq_blocksize=32))
+    toks = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32)
+    from repro.models import transformer as tf
+    full_logits, _, _ = tf.forward(qp, cfg, toks)
+    cache = api.make_cache(cfg, 1, 32, dtype=jnp.float32)
+    logits_p, cache = api.prefill_step(qp, cfg, {"tokens": toks[:, :6]}, cache)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, 5]),
+                               rtol=5e-2, atol=5e-2)
+    logits_d, cache = api.decode_step(qp, cfg, toks[:, 6], cache)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full_logits[:, 6]),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_moe_expert_quantization(trained):
+    """MoE experts (3-D stacked weights) quantize with per-expert Hessians."""
+    cfg = dataclasses.replace(get_smoke_config("qwen3_moe_30b_a3b"),
+                              vocab=128, n_layers=1)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    calib = calibration_set(vocab=128, n_segments=4, seq_len=32)
+    hess = calibrate(params, cfg, calib, batch_size=2)
+    assert any("expert_in_0" in k for k in hess)
+    qp, rep = quantize_model_params(
+        params, cfg, hess, CLAQConfig(bits=4, method="kmeans",
+                                      kmeans_iters=4, gptq_blocksize=32))
+    from repro.core.quantized import QuantizedTensor
+    leaves = jax.tree_util.tree_leaves(
+        qp, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    assert any(isinstance(l, QuantizedTensor) for l in leaves)
+    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(
+        0, 128, size=(2, 32)), jnp.int32)}
+    loss_q, _ = api.loss_fn(qp, cfg, batch)
+    loss_fp, _ = api.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss_q)
+    assert float(loss_q) < float(loss_fp) + 1.0
+
+
+def test_heuristic_ap_search_budget():
+    rng = np.random.default_rng(0)
+    mats = [MatrixInfo(f"m{i}", 128, 128, float(r))
+            for i, r in enumerate(rng.random(24))]
+    res = heuristic_ap_search(mats, target_bits=2.5)
+    assert res.avg_bits <= 2.5 + 1e-9
+    assert res.score > 0
+    # higher-outlier matrices get the higher-precision mixes
+    by_or = sorted(mats, key=lambda m: -m.outlier_ratio)
+    top_pair = res.assignment[by_or[0].name][0]
+    bottom_pair = res.assignment[by_or[-1].name][0]
+    assert top_pair[1] >= bottom_pair[1]

@@ -1,0 +1,228 @@
+"""Substrate tests: data determinism, optimizer, train loop learning +
+microbatch equivalence, checkpoint fault tolerance, serving engine."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, SyntheticCorpus, calibration_set
+from repro.models import api
+from repro.optim import (OptimConfig, apply_updates, compress_int8,
+                         decompress_int8, init_opt_state, schedule)
+from repro.serve import ServingEngine
+from repro.train import make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------------- data
+
+def test_data_deterministic_and_stateless():
+    cfg = DataConfig(vocab=977, seq_len=33, batch=6, seed=4)
+    c1, c2 = SyntheticCorpus(cfg), SyntheticCorpus(cfg)
+    np.testing.assert_array_equal(c1.batch_at(17), c2.batch_at(17))
+    assert not np.array_equal(c1.batch_at(17), c1.batch_at(18))
+    assert int(c1.batch_at(5).max()) < 977
+
+
+def test_data_sharding_partitions_batch():
+    cfg = DataConfig(vocab=500, seq_len=16, batch=8, seed=1)
+    full = SyntheticCorpus(cfg).batch_at(3)
+    parts = [SyntheticCorpus(cfg, shard=i, num_shards=4).batch_at(3)
+             for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_data_families_differ():
+    a = SyntheticCorpus(DataConfig(500, 32, 4, seed=0, name="c4like")).batch_at(0)
+    b = SyntheticCorpus(DataConfig(500, 32, 4, seed=0, name="wikilike")).batch_at(0)
+    assert not np.array_equal(a, b)
+
+
+def test_calibration_set_matches_paper_protocol():
+    c = calibration_set(vocab=1000, n_segments=16, seq_len=64)
+    assert c.shape == (16, 64)
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(schedule(jnp.asarray(5), cfg)) < 1.0
+    assert abs(float(schedule(jnp.asarray(10), cfg)) - 1.0) < 1e-6
+    assert float(schedule(jnp.asarray(100), cfg)) < 1e-3
+
+
+def test_adamw_decreases_quadratic():
+    cfg = OptimConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    st = init_opt_state(params, cfg)
+    for _ in range(60):
+        g = {"w": 2 * params["w"]}
+        params, st, _ = apply_updates(params, g, st, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_int8_compression_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    q, scale = compress_int8(g)
+    back = decompress_int8(q, scale)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.5 + 1e-7
+
+
+# -------------------------------------------------------------------- train
+
+def test_training_learns_and_microbatch_consistent():
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=256,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = OptimConfig(lr=1e-2, warmup_steps=5, total_steps=60)
+    data = SyntheticCorpus(DataConfig(vocab=256, seq_len=64, batch=8, seed=0))
+
+    step1 = jax.jit(make_train_step(cfg, ocfg, n_microbatches=1))
+    step2 = jax.jit(make_train_step(cfg, ocfg, n_microbatches=2))
+
+    # single-step equivalence of grad accumulation (same params/opt in)
+    opt = init_opt_state(params, ocfg)
+    p1, _, m1 = step1(params, opt, {"tokens": data.batch_at(0)})
+    p2, _, m2 = step2(params, opt, {"tokens": data.batch_at(0)})
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree_util.tree_leaves(p1),
+                            jax.tree_util.tree_leaves(p2)))
+    assert d < 5e-3, d
+
+    # learning
+    opt = init_opt_state(params, ocfg)
+    losses = []
+    for s in range(30):
+        params, opt, m = step1(params, opt, {"tokens": data.batch_at(s)})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+# --------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_async_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        state = {"a": jnp.arange(5, dtype=jnp.float32),
+                 "nested": {"b": jnp.ones((3, 3), jnp.bfloat16)}}
+        for s in (1, 2, 3):
+            mgr.save(s, state, blocking=(s != 3))
+        mgr.wait()
+        assert sorted(mgr._list_steps()) == [2, 3]   # keep=2 GC
+        step, restored = mgr.restore_latest(state)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(state["a"]))
+        assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_corrupt_tail_falls_back():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        state = {"w": jnp.arange(8, dtype=jnp.float32)}
+        mgr.save(10, state)
+        mgr.save(20, {"w": state["w"] * 2})
+        # corrupt the newest checkpoint's arrays (torn write)
+        path = os.path.join(d, "step_0000000020", "arrays.npz")
+        with open(path, "r+b") as f:
+            f.seek(30)
+            f.write(b"\x00" * 20)
+        step, restored = mgr.restore_latest(state)
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(8, dtype=np.float32))
+
+
+def test_checkpoint_resume_is_exact():
+    """Restart mid-run reproduces the uninterrupted trajectory exactly
+    (step-indexed data + exact state restore)."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2_1p5b"), vocab=128,
+                              n_layers=1)
+    ocfg = OptimConfig(lr=5e-3, warmup_steps=2, total_steps=20)
+    data = SyntheticCorpus(DataConfig(vocab=128, seq_len=32, batch=4, seed=0))
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+
+    def run(params, opt, lo, hi):
+        for s in range(lo, hi):
+            params, opt, m = step_fn(params, opt, {"tokens": data.batch_at(s)})
+        return params, opt, float(m["loss"])
+
+    params0 = api.init_params(jax.random.PRNGKey(0), cfg)
+    opt0 = init_opt_state(params0, ocfg)
+    _, _, loss_straight = run(params0, opt0, 0, 10)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        p, o, _ = run(params0, opt0, 0, 5)
+        mgr.save(5, {"p": p, "o": o})
+        # simulate preemption: restore into fresh templates
+        fresh_p = api.init_params(jax.random.PRNGKey(9), cfg)
+        fresh_o = init_opt_state(fresh_p, ocfg)
+        st = mgr.restore(5, {"p": fresh_p, "o": fresh_o})
+        _, _, loss_resumed = run(st["p"], st["o"], 5, 10)
+    assert abs(loss_resumed - loss_straight) < 1e-5
+
+
+# ------------------------------------------------------------------ serving
+
+def test_engine_matches_sequential_decode():
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[1, 2, 3, 4, 5], [7, 8, 9], [11, 12, 13, 14]]
+
+    # reference: one-at-a-time greedy decode
+    ref_tokens = []
+    for pr in prompts:
+        cache = api.make_cache(cfg, 1, 64, dtype=jnp.float32)
+        logits, cache = api.prefill_step(
+            params, cfg, {"tokens": jnp.asarray([pr], jnp.int32)}, cache)
+        toks = [int(jnp.argmax(logits[0]))]
+        for _ in range(4):
+            logits, cache = api.decode_step(
+                params, cfg, jnp.asarray([toks[-1]], jnp.int32), cache)
+            toks.append(int(jnp.argmax(logits[0])))
+        ref_tokens.append(toks)
+
+    eng = ServingEngine(params, cfg, n_slots=4, max_len=64)
+    uids = [eng.add_request(p, max_new_tokens=5) for p in prompts]
+    eng.run_to_completion()
+    # engine retired requests; compare recorded tokens
+    all_reqs = {}
+    # recover from uids via order of admission
+    # (requests recorded in ref order)
+    for uid, pr, ref in zip(uids, prompts, ref_tokens):
+        pass
+    # engine stores finished requests only in user space; re-run capturing
+    eng2 = ServingEngine(params, cfg, n_slots=4, max_len=64)
+    reqs = []
+    for p in prompts:
+        uid = eng2.add_request(p, max_new_tokens=5)
+        reqs.append(eng2.active[uid])
+    eng2.run_to_completion()
+    for req, ref in zip(reqs, ref_tokens):
+        assert req.tokens == ref, (req.tokens, ref)
+
+
+def test_engine_slot_reuse():
+    cfg = dataclasses.replace(get_smoke_config("qwen2_1p5b"), vocab=64,
+                              n_layers=1)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=32)
+    done = []
+    pending = [[1, 2], [3, 4], [5, 6], [7, 8]]
+    while pending or eng.active:
+        while pending and eng.free:
+            uid = eng.add_request(pending.pop(0), max_new_tokens=3)
+            done.append(eng.active[uid])
+        eng.step()
+    assert all(r.done for r in done) and len(done) == 4
