@@ -51,6 +51,13 @@ def plan_matrix(W: Array, cfg: CLAQConfig,
     rows, cols = W.shape
     if metric == "outlier_order":
         R = outlier_lib.outlier_ratio(W, cfg.outlier_standard)
+        # Tie-break by normalized column peak magnitude: R_j is quantized in
+        # steps of 1/rows, so a term < 1/(2*rows) can never reorder distinct
+        # ratios, but it keeps the Outlier Order total when no entry clears
+        # S*mean (small calibration-free matrices, near-Gaussian weights) —
+        # the ranking limit of Eq. 3 as the outlier standard decreases.
+        peak = jnp.max(jnp.abs(W.astype(jnp.float32)), axis=0)
+        R = R + peak / (jnp.max(peak) + 1e-30) * (0.5 / rows)
     elif metric == "magnitude_mp":
         R = policy.magnitude_mp_metric(W, act_norm)
     else:
@@ -161,7 +168,8 @@ def quantize_matrix(
 def _quantize_rowsharded(Wp, U, bits_p, res_p, kwargs, mesh, shard_axis):
     """Run the GPTQ loop with matrix rows sharded over `shard_axis`."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.dist.compat import shard_map
 
     def body(Wl, Ul, bl, rl):
         return gptq.gptq_quantize_matrix(

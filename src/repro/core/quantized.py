@@ -80,6 +80,21 @@ class QuantizedTensor:
             W = W.at[safe_idx, colj].set(self.out_val, mode="drop")
         return W.astype(dtype)
 
+    def prepare(self, **kwargs):
+        """Compile (and cache) the ahead-of-time inference plan for this
+        tensor (kernels.plan.prepare_for_inference).  The cache lives on
+        the instance, outside the pytree data fields, so it never flows
+        through jit; it is keyed on the requested block sizes, so callers
+        tuning bn/bk never get a stale plan."""
+        key = tuple(sorted(kwargs.items()))
+        cache = object.__getattribute__(self, "__dict__").setdefault(
+            "_plans", {})
+        plan = cache.get(key)
+        if plan is None:
+            from repro.kernels.plan import prepare_for_inference
+            plan = cache[key] = prepare_for_inference(self, **kwargs)
+        return plan
+
     def effective_bits(self, include_codebooks: bool = False) -> float:
         rows, cols = self.shape
         code_bits = sum(packing.storage_bits_per_element(s.bits) * rows * s.n_cols

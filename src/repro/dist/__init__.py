@@ -1,0 +1,1 @@
+from . import compat, context, hlo_analysis, sharding  # noqa: F401

@@ -1,0 +1,21 @@
+"""Version shims for jax APIs that moved between releases.
+
+`shard_map` graduated from `jax.experimental.shard_map` to `jax.shard_map`,
+and its replication-check kwarg was renamed `check_rep` -> `check_vma` along
+the way.  Callers import it from here and always pass the new-style kwargs.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """`jax.shard_map` with new-style kwargs on any supported jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

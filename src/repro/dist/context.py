@@ -1,0 +1,84 @@
+"""Mesh context + logical-axis sharding constraints.
+
+Models are written against two *logical* axes — "dp" (data parallel) and
+"model" (tensor parallel) — which map onto whatever physical mesh is
+active: ("data", "model") single-pod, ("pod", "data", "model") multi-pod
+("dp" then spans pod x data).  `constrain` is the single entry point model
+code uses; it silently no-ops without an active mesh (eager calibration,
+single-device tests) and *drops any logical axis that does not divide the
+corresponding array dimension*, so layer code can state its preferred
+sharding unconditionally and stay shape-generic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+# logical axis name -> physical mesh axes (in priority order; only axes
+# present in the active mesh are used)
+_LOGICAL = {
+    "dp": ("pod", "data"),
+    "model": ("model",),
+    "dp+model": ("pod", "data", "model"),
+}
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[jax.sharding.Mesh]):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def physical_axes(mesh, logical: Optional[str]) -> Tuple[str, ...]:
+    """Physical mesh axes backing a logical axis name (may be empty)."""
+    if logical is None:
+        return ()
+    return tuple(a for a in _LOGICAL[logical] if a in mesh.shape)
+
+
+def _axis_size(mesh, logical: Optional[str]) -> int:
+    size = 1
+    for a in physical_axes(mesh, logical):
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_entry(mesh, logical: Optional[str]):
+    """PartitionSpec entry for one logical axis (None / name / tuple)."""
+    axes = physical_axes(mesh, logical)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """Apply a sharding constraint given per-dimension logical axis names
+    ("dp" | "model" | "dp+model" | None).  Non-divisible axes are dropped;
+    with no active mesh this is the identity."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    entries = []
+    for dim, logical in zip(x.shape, logical_axes):
+        size = _axis_size(mesh, logical)
+        if logical is None or size <= 1 or dim % size != 0:
+            entries.append(None)
+        else:
+            entries.append(spec_entry(mesh, logical))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*entries)))

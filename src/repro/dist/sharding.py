@@ -1,0 +1,113 @@
+"""Named sharding rules for params / batches / caches.
+
+A *rule* is `rule(name, shape, cfg, ax) -> PartitionSpec`, applied per leaf
+by `with_shardings` (ShapeDtypeStruct trees, dry-run lowering) or
+`tree_shardings` (concrete trees, device_put).  Rules are divisibility-
+guarded so the same rule set covers every arch family and the CLAQ
+QuantizedTensor leaves (packed planes / codebooks / outlier tables) without
+per-arch special cases: a dimension is only sharded when the mesh axis
+divides it, otherwise it stays replicated.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from . import context as dctx
+
+
+class MeshAxes:
+    """Resolved logical axes of a mesh ("dp" spans pod x data when present)."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.dp_axes: Tuple[str, ...] = dctx.physical_axes(mesh, "dp")
+        self.model_axes: Tuple[str, ...] = dctx.physical_axes(mesh, "model")
+        self.dp_size: int = dctx._axis_size(mesh, "dp")
+        self.model_size: int = dctx._axis_size(mesh, "model")
+
+    @property
+    def dp(self):
+        return dctx.spec_entry(self.mesh, "dp")
+
+    @property
+    def model(self):
+        return dctx.spec_entry(self.mesh, "model")
+
+
+def _shardable(dim: int, size: int) -> bool:
+    return size > 1 and dim >= size and dim % size == 0
+
+
+def spec_for_param(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
+    """Tensor-parallel params: shard the largest model-divisible dimension
+    over "model"; everything else replicated.  Covers dense kernels
+    (in, out), stacked (L, in, out), embeddings (vocab, d), and quantized
+    leaves (packed planes / codebooks / outlier tables) uniformly."""
+    if not shape or ax.model_size <= 1:
+        return PartitionSpec()
+    candidates = [d for d, dim in enumerate(shape)
+                  if _shardable(dim, ax.model_size)]
+    if not candidates:
+        return PartitionSpec()
+    best = max(candidates, key=lambda d: shape[d])
+    entries = [None] * len(shape)
+    entries[best] = ax.model
+    return PartitionSpec(*entries)
+
+
+def spec_for_param_serve(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
+    """Serving keeps the training TP layout (decode is weight-bound; the
+    all-gather of a replicated layout would dominate the step)."""
+    return spec_for_param(name, shape, cfg, ax)
+
+
+def spec_for_batch(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
+    """Batches shard their leading (global batch) dimension over "dp"."""
+    if not shape or not _shardable(shape[0], ax.dp_size):
+        return PartitionSpec()
+    return PartitionSpec(ax.dp)
+
+
+def spec_for_cache(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
+    """KV/state caches: batch dim over "dp"; the head/state dim (axis -2 of
+    rank>=3 leaves, e.g. (B, S, KH, D) kv or (B, H, N, N) wkv state) over
+    "model" when divisible."""
+    if not shape:
+        return PartitionSpec()
+    entries = [None] * len(shape)
+    if _shardable(shape[0], ax.dp_size):
+        entries[0] = ax.dp
+    if len(shape) >= 3 and _shardable(shape[-2], ax.model_size):
+        entries[-2] = ax.model
+    return PartitionSpec(*entries)
+
+
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def tree_shardings(tree, rule, cfg, mesh):
+    """Tree of NamedShardings for `tree` (concrete or SDS leaves)."""
+    ax = MeshAxes(mesh)
+
+    def one(path, leaf):
+        return NamedSharding(mesh, rule(_leaf_name(path), np.shape(leaf),
+                                        cfg, ax))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def with_shardings(tree, rule, cfg, mesh):
+    """ShapeDtypeStruct tree re-annotated with NamedShardings (dry-run)."""
+    ax = MeshAxes(mesh)
+
+    def one(path, leaf):
+        spec = rule(_leaf_name(path), leaf.shape, cfg, ax)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,3 +1,6 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from .plan import (  # noqa: F401
+    PlanGroup, PreparedQuantizedTensor, prepare_for_inference, prepare_tree,
+)

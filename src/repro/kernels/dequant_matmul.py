@@ -31,6 +31,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+# jax<0.5 names the Pallas TPU params class TPUCompilerParams; newer jax
+# renamed it back to CompilerParams.  Resolve whichever exists.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "TPUCompilerParams", None) \
+    or getattr(pltpu, "CompilerParams")
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
@@ -59,20 +64,24 @@ def _dequant_tile(codes, cb, n_levels: int, compute_dtype):
 
 
 def _kernel(x_ref, *rest, bits: int, plane_widths: Sequence[int], bn: int,
-            k_out: int, n_levels: int, compute_dtype):
+            k_out: int, n_levels: int, has_acc: bool, compute_dtype):
     nplanes = len(plane_widths)
     plane_refs = rest[:nplanes]
-    cb_ref = rest[nplanes]
+    rest = rest[nplanes:]
+    cb_ref, rest = rest[0], rest[1:]
     if k_out > 0:
-        idx_ref, val_ref, o_ref = rest[nplanes + 1:]
-    else:
-        o_ref = rest[nplanes + 1]
+        idx_ref, val_ref, rest = rest[0], rest[1], rest[2:]
+    if has_acc:
+        acc_ref, rest = rest[0], rest[1:]
+    (o_ref,) = rest
 
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        # seed the VMEM-resident output block: zeros, or the running
+        # accumulator when fusing multiple bit-width groups into one output
+        o_ref[...] = acc_ref[...] if has_acc else jnp.zeros_like(o_ref)
 
     # --- unpack code planes -> (bn, bk) int32 codes -------------------------
     codes = None
@@ -100,27 +109,18 @@ def _kernel(x_ref, *rest, bits: int, plane_widths: Sequence[int], bn: int,
         x, wt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
 
+# pallas_call dispatches issued from python since process start (trace-time
+# under jit).  Tests and benchmarks read deltas of this to assert the fused
+# plan path launches exactly one kernel per distinct stripe bit-width.
+launch_count = 0
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "n", "bm", "bn", "bk", "interpret", "compute_dtype"),
 )
-def dequant_matmul(
-    x: Array,                     # (M, K)
-    planes: tuple,                # per-plane (n_words, K) uint32
-    codebook: Array,              # (K, 2**bits)
-    out_idx: Optional[Array],     # (k_out, K) int32 global row ids, -1 pad
-    out_val: Optional[Array],     # (k_out, K)
-    *,
-    bits: int,
-    n: int,                       # N = out features (rows of W)
-    bm: int = DEFAULT_BM,
-    bn: int = DEFAULT_BN,
-    bk: int = DEFAULT_BK,
-    interpret: bool = False,
-    compute_dtype=jnp.float32,
-) -> Array:
-    """y = x @ W^T for a single-stripe CLAQ tensor. Shapes must be padded to
-    block multiples by the caller (kernels/ops.py does this)."""
+def _dequant_matmul(x, planes, codebook, out_idx, out_val, acc, *,
+                    bits, n, bm, bn, bk, interpret, compute_dtype):
     from repro.core import packing
 
     widths = packing.plane_widths(bits)
@@ -145,10 +145,15 @@ def dequant_matmul(
         in_specs.append(pl.BlockSpec((k_out, bk), lambda i, j, k: (0, k)))
         in_specs.append(pl.BlockSpec((k_out, bk), lambda i, j, k: (0, k)))
         operands.extend([out_idx, out_val])
+    if acc is not None:
+        assert acc.shape == (m, n), (acc.shape, m, n)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        operands.append(acc)
 
     kernel = functools.partial(
         _kernel, bits=bits, plane_widths=widths, bn=bn, k_out=k_out,
-        n_levels=n_levels, compute_dtype=compute_dtype)
+        n_levels=n_levels, has_acc=acc is not None,
+        compute_dtype=compute_dtype)
 
     return pl.pallas_call(
         kernel,
@@ -156,7 +161,35 @@ def dequant_matmul(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*operands)
+
+
+def dequant_matmul(
+    x: Array,                     # (M, K)
+    planes: tuple,                # per-plane (n_words, K) uint32
+    codebook: Array,              # (K, 2**bits)
+    out_idx: Optional[Array],     # (k_out, K) int32 global row ids, -1 pad
+    out_val: Optional[Array],     # (k_out, K)
+    *,
+    bits: int,
+    n: int,                       # N = out features (rows of W)
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    compute_dtype=jnp.float32,
+    acc: Optional[Array] = None,  # (M, N) f32 running accumulator to fold in
+) -> Array:
+    """y = [acc +] x @ W^T for one uniform-bit-width CLAQ group.  Shapes
+    must be padded to block multiples by the caller (kernels/ops.py /
+    kernels/plan.py do this).  `acc` seeds the output block at the first K
+    step, so multi-group (mixed-precision) matmuls accumulate inside the
+    kernel instead of through an XLA add per group."""
+    global launch_count
+    launch_count += 1
+    return _dequant_matmul(x, tuple(planes), codebook, out_idx, out_val, acc,
+                           bits=bits, n=n, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret, compute_dtype=compute_dtype)

@@ -17,6 +17,7 @@ from repro.core.quantized import QuantizedTensor
 
 from . import dequant_matmul as dm
 from . import ref as ref_lib
+from .plan import PreparedQuantizedTensor, validated_outliers
 
 Array = jax.Array
 
@@ -81,42 +82,96 @@ def _round_up(v: int, mult: int) -> int:
     return ((v + mult - 1) // mult) * mult
 
 
-def _prepared_outliers(qt: QuantizedTensor):
-    """Permute outlier planes to stripe order; mark invalid slots idx=-1."""
-    if qt.out_idx.shape[0] == 0:
-        return None, None
-    k = qt.out_idx.shape[0]
-    idx_p = qt.out_idx[:, qt.col_perm]
-    val_p = qt.out_val[:, qt.col_perm]
-    cnt_p = qt.out_count[qt.col_perm]
-    valid = jnp.arange(k)[:, None] < cnt_p[None, :]
-    return jnp.where(valid, idx_p, -1), jnp.where(valid, val_p, 0.0)
+def prepared_qmatmul(
+    x: Array,
+    pqt: PreparedQuantizedTensor,
+    *,
+    interpret: bool = True,
+    bm: int = dm.DEFAULT_BM,
+    compute_dtype=jnp.float32,
+) -> Array:
+    """Fused hot path: x (..., K) @ dequantize(pqt)^T -> (..., N).
+
+    The plan did all per-tensor work offline, so this is: one gather (the
+    folded stripe permutation + padding), one pad of x rows to the M block,
+    then exactly ONE `pallas_call` per distinct stripe bit-width, each
+    accumulating into the same output block via the kernel's acc operand.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xg = jnp.take(x2, pqt.gather_idx, axis=1, mode="fill", fill_value=0)
+    m = x2.shape[0]
+    bm = min(bm, _round_up(m, 8))
+    xp = _pad_to(xg, 0, bm)
+
+    y = None
+    off = 0
+    for g in pqt.groups:
+        xs = jax.lax.slice_in_dim(xp, off, off + g.k_padded, axis=1)
+        y = dm.dequant_matmul(
+            xs, g.planes, g.codebook, g.out_idx, g.out_val,
+            bits=g.bits, n=pqt.n_padded, bm=bm, bn=pqt.bn, bk=g.bk,
+            interpret=interpret, compute_dtype=compute_dtype, acc=y)
+        off += g.k_padded
+    return y[:m, :pqt.rows].reshape(lead + (pqt.rows,)).astype(x.dtype)
+
+
+def _prepared_ref_qmatmul(x: Array, pqt: PreparedQuantizedTensor) -> Array:
+    """XLA path over the prepared layout.  Unlike ref_qmatmul it never
+    scatters W back into original column order: the gather index already
+    aligned the activations with the fused group layout, so the matmul is a
+    plain per-group dequant + dot accumulation (padded K slots have zero
+    codebooks and idx=-1 outliers, so they contribute exactly zero)."""
+    rows = pqt.rows
+    xg = jnp.take(x.astype(jnp.float32), pqt.gather_idx, axis=-1,
+                  mode="fill", fill_value=0)
+    y = jnp.zeros(x.shape[:-1] + (rows,), jnp.float32)
+    off = 0
+    for g in pqt.groups:
+        Wg = jnp.take_along_axis(g.codebook.T.astype(jnp.float32),
+                                 g.unpack_codes(rows), axis=0)
+        Wg = ref_lib.ref_apply_outliers(Wg, g.out_idx, g.out_val)
+        # XLA doesn't need the kernel's K padding — slice to the unpadded
+        # group so total contraction is exactly `cols` (parity with the
+        # dense dot; padded slots are zero anyway).
+        xs = jax.lax.slice_in_dim(xg, off, off + g.k_cols, axis=-1)
+        y = y + jnp.einsum("...k,nk->...n", xs, Wg[:, :g.k_cols],
+                           preferred_element_type=jnp.float32)
+        off += g.k_padded
+    return y
 
 
 def qmatmul(
     x: Array,
-    qt: QuantizedTensor,
+    qt,
     *,
     use_kernel: bool = False,
     interpret: bool = True,
     compute_dtype=None,
 ) -> Array:
-    """x (..., K) @ dequantize(qt)^T -> (..., N).
+    """x (..., K) @ dequantize(qt)^T -> (..., N) for a QuantizedTensor or a
+    PreparedQuantizedTensor.
 
     use_kernel=False: XLA reference path (gather-dequant + dot). This is what
     the CPU dry-run lowers (Pallas TPU kernels can't lower on the CPU
     backend); its HLO cost is the *baseline* the kernel improves on.
     use_kernel=True: the Pallas kernel (interpret=True on CPU for tests).
+    Prepared tensors take the fused path: one launch per distinct bit-width.
     """
     if compute_dtype is None:
         compute_dtype = jnp.float32 if x.dtype == jnp.float32 else jnp.bfloat16
+    if isinstance(qt, PreparedQuantizedTensor):
+        if not use_kernel:
+            return _prepared_ref_qmatmul(x, qt).astype(x.dtype)
+        return prepared_qmatmul(x, qt, interpret=interpret,
+                                compute_dtype=compute_dtype)
     if not use_kernel:
         return ref_lib.ref_qmatmul(x, qt).astype(x.dtype)
 
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     xp = jnp.take(x2, qt.col_perm, axis=1)     # stripe order
-    oi, ov = _prepared_outliers(qt)
+    oi, ov = validated_outliers(qt)
 
     y = jnp.zeros((x2.shape[0], qt.rows), jnp.float32)
     off = 0

@@ -1,0 +1,259 @@
+"""Ahead-of-time inference plans: compile a QuantizedTensor into the exact
+padded, fused layout the Pallas dequant-GEMM consumes.
+
+`kernels/ops.qmatmul` on a raw QuantizedTensor re-derives padding, plane
+splits, the stripe column permutation, and outlier validity masks inside
+every traced matmul, and issues one `pallas_call` per stripe.  All of that
+is per-*tensor* work, not per-*token* work.  `prepare_for_inference` does
+it once, at load/quantize time:
+
+  (a) code planes, codebooks, and outlier tables are padded to kernel
+      block multiples (K to the group's bk, N to bn) — padding K slots
+      carry zero codebooks and idx=-1 outliers, so they contribute exactly
+      zero and never need masking at matmul time;
+  (b) the per-stripe column slicing is folded into ONE gather index over
+      the activation's K axis (`jnp.take(..., mode="fill")`; padded slots
+      point one past the end and gather zeros);
+  (c) outlier slots are pre-validated: the per-column count is converted
+      to idx=-1 padding once, instead of a mask per matmul;
+  (d) stripes are grouped by bit-width and concatenated along K, so a
+      matmul issues ONE fused `pallas_call` per distinct bit-width
+      (typically 1-3) instead of one per stripe, with each group's output
+      accumulated into the same VMEM-resident block via the kernel's `acc`
+      operand.
+
+The prepared tensor is a registered pytree: it can replace QuantizedTensor
+leaves inside a params tree and flow through jit/pjit with zero per-trace
+preparation (serve/engine.py prepares every leaf at construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantized import QuantizedTensor
+
+from . import dequant_matmul as dm
+
+Array = jax.Array
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGroup:
+    """All same-bit-width stripes, concatenated along K and block-padded."""
+    planes: Tuple[Array, ...]   # per plane-width: (n_padded//cpw, k_padded) u32
+    codebook: Array             # (k_padded, 2**bits) f32, zero at padding
+    out_idx: Optional[Array]    # (k_out, k_padded) int32, -1 = no outlier
+    out_val: Optional[Array]    # (k_out, k_padded) f32
+    bits: int                   # static
+    bk: int                     # static — K block size for this group
+    k_cols: int                 # static — unpadded fused K of the group
+
+    @property
+    def k_padded(self) -> int:
+        return self.codebook.shape[0]
+
+    def unpack_codes(self, rows: int) -> Array:
+        """Recombine the group's split planes -> (rows, k_padded) int32."""
+        codes = None
+        shift = 0
+        for w, p in zip(packing.plane_widths(self.bits), self.planes):
+            part = packing._unpack_plane(p, w, rows) << shift
+            codes = part if codes is None else codes | part
+            shift += w
+        return codes
+
+
+jax.tree_util.register_dataclass(
+    PlanGroup,
+    data_fields=["planes", "codebook", "out_idx", "out_val"],
+    meta_fields=["bits", "bk", "k_cols"])
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedQuantizedTensor:
+    """Deployment format: one gather index + one padded group per bit-width."""
+    groups: Tuple[PlanGroup, ...]
+    gather_idx: Array        # (sum k_padded,) int32 original-col per fused
+    #                          K slot; == cols for padding (gathers 0.0)
+    shape: Tuple[int, int]   # static (rows, cols) of the logical matrix
+    n_padded: int            # static — rows padded to the N block
+    bn: int                  # static — N block size (shared by all groups)
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.shape[1]
+
+    def dequantize(self, dtype=jnp.float32) -> Array:
+        """Reference dequantization from the *prepared* layout (oracle for
+        plan-vs-tensor parity tests; also serves materialize_kernel)."""
+        rows, cols = self.shape
+        W = jnp.zeros((rows, cols + 1), jnp.float32)   # last col: padding sink
+        off = 0
+        for g in self.groups:
+            Wg = jnp.take_along_axis(g.codebook.T.astype(jnp.float32),
+                                     g.unpack_codes(rows), axis=0)
+            if g.out_idx is not None:
+                safe = jnp.where(g.out_idx >= 0, g.out_idx, rows)
+                colk = jnp.broadcast_to(
+                    jnp.arange(g.k_padded)[None, :], g.out_idx.shape)
+                Wg = Wg.at[safe, colk].set(g.out_val, mode="drop")
+            idx = self.gather_idx[off:off + g.k_padded]
+            W = W.at[:, idx].set(Wg)
+            off += g.k_padded
+        return W[:, :cols].astype(dtype)
+
+    def effective_bits(self, include_codebooks: bool = False) -> float:
+        """Storage cost of the *unpadded* payload (parity with
+        QuantizedTensor.effective_bits up to outlier-count rounding)."""
+        rows, cols = self.shape
+        total = 0.0
+        for g in self.groups:
+            total += packing.storage_bits_per_element(g.bits) * rows * g.k_cols
+            if g.out_idx is not None:
+                total += 32.0 * float(jnp.sum(g.out_idx[:, :g.k_cols] >= 0))
+            if include_codebooks:
+                total += g.k_cols * g.codebook.shape[1] * 16.0
+        return total / (rows * cols)
+
+
+jax.tree_util.register_dataclass(
+    PreparedQuantizedTensor,
+    data_fields=["groups", "gather_idx"],
+    meta_fields=["shape", "n_padded", "bn"])
+
+
+def validated_outliers(qt: QuantizedTensor):
+    """Outlier planes in stripe-permuted column order, invalid slots idx=-1.
+    (Shared with the unprepared kernel dispatch in ops.py — the -1 contract
+    must match the kernel epilogue in both paths.)"""
+    if qt.out_idx.shape[0] == 0:
+        return None, None
+    k = qt.out_idx.shape[0]
+    idx_p = qt.out_idx[:, qt.col_perm]
+    val_p = qt.out_val[:, qt.col_perm]
+    cnt_p = qt.out_count[qt.col_perm]
+    valid = jnp.arange(k)[:, None] < cnt_p[None, :]
+    return (jnp.where(valid, idx_p, -1).astype(jnp.int32),
+            jnp.where(valid, val_p, 0.0).astype(jnp.float32))
+
+
+def prepare_for_inference(
+    qt: QuantizedTensor,
+    *,
+    bn: int = dm.DEFAULT_BN,
+    bk: int = dm.DEFAULT_BK,
+) -> PreparedQuantizedTensor:
+    """Compile `qt` into the fused deployment layout (see module docstring).
+
+    bn/bk are *upper bounds*; each is shrunk to the tensor (bn to N rounded
+    to the 32-row packing word, bk per group to its fused K rounded to the
+    128-lane tile) so small matrices don't pay full-block padding.
+
+    Layer-stacked tensors (launch.quantize stacks per-layer results, so
+    data leaves carry leading (L,) or (L, E) dims while `shape` stays the
+    per-matrix (rows, cols)) are prepared by vmapping over the stack: the
+    AP/OR allocations depend only on (rows, cols), so every member shares
+    one static plan layout, and the stacked prepared leaves slice per
+    layer through scan / tree_map exactly like the stacked input did.
+    """
+    stack_dims = qt.stripes[0].packed.ndim - 2
+    if stack_dims > 0:
+        fn = lambda q: prepare_for_inference(q, bn=bn, bk=bk)  # noqa: E731
+        for _ in range(stack_dims):
+            fn = jax.vmap(fn)
+        return fn(qt)
+
+    rows = qt.rows
+    bn = min(bn, _round_up(rows, 32))
+    n_padded = _round_up(rows, bn)
+
+    oi, ov = validated_outliers(qt)
+
+    # stripe offsets into the permuted column order
+    offsets = []
+    off = 0
+    for s in qt.stripes:
+        offsets.append(off)
+        off += s.n_cols
+
+    groups = []
+    idx_parts = []
+    for bits in sorted({s.bits for s in qt.stripes}):
+        members = [(o, s) for o, s in zip(offsets, qt.stripes)
+                   if s.bits == bits]
+        k_cols = sum(s.n_cols for _, s in members)
+        g_bk = min(bk, _round_up(k_cols, 128))
+        k_padded = _round_up(k_cols, g_bk)
+
+        widths = packing.plane_widths(bits)
+        planes = []
+        for wi, w in enumerate(widths):
+            cpw = 32 // w
+            parts = [packing.split_planes(s.packed, bits, rows)[wi]
+                     for _, s in members]
+            p = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+            p = jnp.pad(p, ((0, n_padded // cpw - p.shape[0]),
+                            (0, k_padded - k_cols)))
+            planes.append(p)
+
+        cb = jnp.concatenate([s.codebook for _, s in members], axis=0) \
+            if len(members) > 1 else members[0][1].codebook
+        cb = jnp.pad(cb.astype(jnp.float32), ((0, k_padded - k_cols), (0, 0)))
+
+        g_oi = g_ov = None
+        if oi is not None:
+            g_oi = jnp.concatenate(
+                [jax.lax.slice_in_dim(oi, o, o + s.n_cols, axis=1)
+                 for o, s in members], axis=1)
+            g_ov = jnp.concatenate(
+                [jax.lax.slice_in_dim(ov, o, o + s.n_cols, axis=1)
+                 for o, s in members], axis=1)
+            g_oi = jnp.pad(g_oi, ((0, 0), (0, k_padded - k_cols)),
+                           constant_values=-1)
+            g_ov = jnp.pad(g_ov, ((0, 0), (0, k_padded - k_cols)))
+
+        idx = jnp.concatenate(
+            [jax.lax.slice_in_dim(qt.col_perm, o, o + s.n_cols)
+             for o, s in members]) if len(members) > 1 \
+            else jax.lax.slice_in_dim(qt.col_perm, members[0][0],
+                                      members[0][0] + members[0][1].n_cols)
+        idx_parts.append(jnp.pad(idx.astype(jnp.int32),
+                                 (0, k_padded - k_cols),
+                                 constant_values=qt.cols))
+
+        groups.append(PlanGroup(
+            planes=tuple(planes), codebook=cb, out_idx=g_oi, out_val=g_ov,
+            bits=bits, bk=g_bk, k_cols=k_cols))
+
+    return PreparedQuantizedTensor(
+        groups=tuple(groups),
+        gather_idx=jnp.concatenate(idx_parts) if len(idx_parts) > 1
+        else idx_parts[0],
+        shape=qt.shape, n_padded=n_padded, bn=bn)
+
+
+def prepare_tree(params, *, bn: int = dm.DEFAULT_BN, bk: int = dm.DEFAULT_BK):
+    """Replace every QuantizedTensor leaf in a params tree with its prepared
+    form (identity on dense leaves).  Engines call this once at load."""
+    def one(leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return leaf.prepare(bn=bn, bk=bk)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        one, params,
+        is_leaf=lambda l: isinstance(l, (QuantizedTensor,
+                                         PreparedQuantizedTensor)))

@@ -339,6 +339,8 @@ def analyze(compiled, cfg, mesh, cell) -> dict:
     from repro.dist.hlo_analysis import analyze_hlo
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<0.5 returns [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     h = analyze_hlo(hlo)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import gptq
 from repro.core.quantized import QuantizedTensor
+from repro.kernels.plan import PreparedQuantizedTensor
 
 Array = jax.Array
 
@@ -130,11 +131,12 @@ def quant_mode(mode: str, interpret: bool = True):
 # ---------------------------------------------------------------------------
 
 def dense(p: Dict[str, Any], x: Array, name: str = "dense") -> Array:
-    """y = x @ kernel (+ bias). kernel: (in, out) array or QuantizedTensor
-    in paper layout (out, in)."""
+    """y = x @ kernel (+ bias). kernel: (in, out) array, or a
+    QuantizedTensor / PreparedQuantizedTensor in paper layout (out, in).
+    Prepared leaves take the fused one-launch-per-bit-width kernel path."""
     full = scoped_name(name)
     kernel = p["kernel"]
-    if isinstance(kernel, QuantizedTensor):
+    if isinstance(kernel, (QuantizedTensor, PreparedQuantizedTensor)):
         from repro.kernels import ops as kops
         y = kops.qmatmul(x, kernel,
                          use_kernel=(QuantMode.mode == "kernel"),
@@ -152,7 +154,7 @@ def materialize_kernel(p: Dict[str, Any]) -> Array:
     """Kernel as a dense (in, out) array (dequantizing if quantized) — for
     paths that need explicit weight access (e.g. MLA absorbed decode)."""
     kernel = p["kernel"]
-    if isinstance(kernel, QuantizedTensor):
+    if isinstance(kernel, (QuantizedTensor, PreparedQuantizedTensor)):
         return kernel.dequantize(jnp.bfloat16).T
     return kernel
 

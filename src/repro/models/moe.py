@@ -23,12 +23,14 @@ Array = jax.Array
 
 
 def _expert_weight(w, dtype):
-    """Expert weights may be a stacked QuantizedTensor (leading E axis).
+    """Expert weights may be a stacked (Prepared)QuantizedTensor (leading E
+    axis — the serving engine prepares quantized leaves at construction).
 
-    QuantizedTensors store paper layout (out, in); the expert einsums
+    Quantized tensors store paper layout (out, in); the expert einsums
     consume (in, out), so dequantized weights are always swapped back."""
     from repro.core.quantized import QuantizedTensor
-    if isinstance(w, QuantizedTensor):
+    from repro.kernels.plan import PreparedQuantizedTensor
+    if isinstance(w, (QuantizedTensor, PreparedQuantizedTensor)):
         deq = jax.vmap(lambda q: q.dequantize(dtype))(w)   # (E, out, in)
         return jnp.swapaxes(deq, 1, 2)                     # (E, in, out)
     return w.astype(dtype)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.plan import prepare_tree
 from repro.models import api
 
 Array = jax.Array
@@ -36,8 +37,12 @@ class Request:
 
 class ServingEngine:
     def __init__(self, params, cfg, n_slots: int = 8, max_len: int = 1024,
-                 dtype=jnp.float32):
-        self.params = params
+                 dtype=jnp.float32, prepare: bool = True):
+        # Compile every QuantizedTensor leaf into its ahead-of-time
+        # inference plan ONCE; the prepared leaves then flow through the
+        # jitted steps with zero per-trace layout work and one kernel
+        # launch per distinct stripe bit-width.
+        self.params = prepare_tree(params) if prepare else params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -49,6 +54,11 @@ class ServingEngine:
 
         self._decode = jax.jit(
             lambda p, t, c: api.decode_step(p, cfg, t, c))
+        # One stable jitted prefill: repeated admissions at the same
+        # bucketed prompt length hit the compile cache instead of
+        # re-tracing through a fresh lambda per request.
+        self._prefill = jax.jit(
+            lambda p, t, c: api.prefill_step(p, cfg, {"tokens": t}, c))
 
     # ------------------------------------------------------------------ admit
     def add_request(self, prompt: List[int], max_new_tokens: int = 16,
@@ -64,9 +74,7 @@ class ServingEngine:
         cache1 = api.make_cache(self.cfg, 1, self.max_len,
                                 dtype=jax.tree_util.tree_leaves(self.cache)[0].dtype)
         toks = jnp.asarray(prompt, jnp.int32)[None, :]
-        logits, cache1 = jax.jit(
-            lambda p, t, c: api.prefill_step(p, self.cfg, {"tokens": t}, c)
-        )(self.params, toks, cache1)
+        logits, cache1 = self._prefill(self.params, toks, cache1)
         first = int(jnp.argmax(logits[0]))
         req.tokens.append(first)
         self.last_token[slot] = first

@@ -56,6 +56,7 @@ def test_compressed_psum_error_feedback(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.dist.compat import shard_map
 from repro.optim import compressed_psum
 mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
@@ -66,8 +67,8 @@ def body(g, e):
     out, new_e = compressed_psum({"g": g}, {"g": e}, "data")
     return out["g"], new_e["g"]
 
-fn = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
-                   out_specs=(P("data"), P("data")), check_vma=False)
+fn = shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+               out_specs=(P("data"), P("data")), check_vma=False)
 out, err = fn(gs, err0)
 true_mean = np.asarray(gs).mean(axis=0)
 # every shard holds the same compressed mean, error bounded by int8 step

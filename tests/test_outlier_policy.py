@@ -1,6 +1,9 @@
 """Outlier Order metric (§3.2) and AP/OR budget policies (§3.3/3.4)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import outlier, policy

@@ -1,6 +1,9 @@
 """Bit-packing roundtrip properties (incl. the 3-bit two-plane scheme)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import packing

@@ -1,0 +1,215 @@
+"""Ahead-of-time inference plans (kernels/plan.py): prepared-vs-reference
+parity across bit-widths, mixed-precision stripe layouts, outlier configs,
+and odd shapes; plus the launch-count contract — a prepared matmul issues
+exactly one pallas_call per distinct stripe bit-width."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import APConfig, CLAQConfig, ORConfig, quantize_matrix
+from repro.core import packing
+from repro.core.quantized import QuantStripe, QuantizedTensor
+from repro.kernels import dequant_matmul as dm
+from repro.kernels import ops, ref as ref_lib
+from repro.kernels.plan import (PreparedQuantizedTensor, prepare_for_inference,
+                                prepare_tree)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _make_qt(rng, rows, stripe_spec, k_out=0):
+    """Synthetic multi-stripe QuantizedTensor.  stripe_spec: [(bits, n_cols)].
+    Covers layouts build_quantized_tensor never emits (duplicate bit-widths,
+    arbitrary stripe order) so the plan's grouping is exercised directly."""
+    cols = sum(n for _, n in stripe_spec)
+    stripes = []
+    for bits, n_cols in stripe_spec:
+        codes = rng.integers(0, 2 ** bits, size=(rows, n_cols)).astype(np.int32)
+        cb = np.sort(rng.normal(size=(n_cols, 2 ** bits)).astype(np.float32),
+                     axis=1)
+        stripes.append(QuantStripe(
+            packed=packing.pack_codes(jnp.asarray(codes), bits),
+            codebook=jnp.asarray(cb), bits=bits))
+    col_perm = jnp.asarray(rng.permutation(cols).astype(np.int32))
+    if k_out > 0:
+        oi = np.stack([rng.permutation(rows)[:k_out] for _ in range(cols)],
+                      axis=1).astype(np.int32)
+        ov = rng.normal(size=(k_out, cols)).astype(np.float32)
+        cnt = rng.integers(0, k_out + 1, size=(cols,)).astype(np.int32)
+    else:
+        oi = np.zeros((0, cols), np.int32)
+        ov = np.zeros((0, cols), np.float32)
+        cnt = np.zeros((cols,), np.int32)
+    return QuantizedTensor(
+        stripes=tuple(stripes), col_perm=col_perm,
+        out_idx=jnp.asarray(oi), out_val=jnp.asarray(ov),
+        out_count=jnp.asarray(cnt), shape=(rows, cols))
+
+
+def _check_parity(qt, m=7, seed=0, atol=1e-3):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, qt.cols)).astype(np.float32))
+    pqt = prepare_for_inference(qt)
+    np.testing.assert_allclose(np.asarray(pqt.dequantize()),
+                               np.asarray(qt.dequantize()),
+                               rtol=1e-6, atol=1e-6)
+    y_ref = ref_lib.ref_qmatmul(x, qt)
+    y = ops.qmatmul(x, pqt, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=atol)
+    y_xla = ops.qmatmul(x, pqt, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    return pqt
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("k_out", [0, 3])
+def test_single_bitwidth_parity(bits, k_out):
+    rng = np.random.default_rng(bits * 10 + k_out)
+    qt = _make_qt(rng, rows=64, stripe_spec=[(bits, 96)], k_out=k_out)
+    pqt = _check_parity(qt)
+    assert len(pqt.groups) == 1
+
+
+@pytest.mark.parametrize("spec", [
+    [(2, 80), (4, 48)],              # the layout build_quantized_tensor emits
+    [(2, 40), (3, 56), (4, 32)],     # three distinct bit-widths
+    [(2, 24), (4, 40), (2, 32)],     # duplicate bit-width stripes fuse
+])
+@pytest.mark.parametrize("k_out", [0, 2])
+def test_mixed_precision_parity(spec, k_out):
+    rng = np.random.default_rng(len(spec) * 100 + k_out)
+    qt = _make_qt(rng, rows=96, stripe_spec=spec, k_out=k_out)
+    pqt = _check_parity(qt)
+    assert len(pqt.groups) == len({b for b, _ in spec})
+
+
+def test_non_multiple_of_block_shapes():
+    rng = np.random.default_rng(5)
+    # rows not a multiple of 32, stripe columns not multiples of 128
+    qt = _make_qt(rng, rows=40, stripe_spec=[(2, 72), (4, 19)], k_out=2)
+    pqt = _check_parity(qt, m=17)
+    assert pqt.n_padded % 32 == 0
+    for g in pqt.groups:
+        assert g.k_padded % g.bk == 0
+
+
+def test_end_to_end_claq_tensor_parity():
+    """Full CLAQ recipe (AP stripes + OR outliers) through the plan."""
+    rng = np.random.default_rng(0)
+    rows, cols = 96, 160
+    W = rng.normal(size=(rows, cols)).astype(np.float32)
+    W[:, :10] += rng.standard_t(df=2, size=(rows, 10)) * 4
+    X = rng.normal(size=(256, cols)).astype(np.float32)
+    H = jnp.asarray(2 * X.T @ X)
+    qt, _, _ = quantize_matrix(jnp.asarray(W), H, CLAQConfig(
+        bits=2, method="kmeans", kmeans_iters=5, gptq_blocksize=32,
+        ap=APConfig(2.5, 2, 4), orr=ORConfig(0.15)))
+    pqt = _check_parity(qt)
+    # the paper layout: one stripe per bit-class -> one group per bit-class
+    assert len(pqt.groups) == len({s.bits for s in qt.stripes})
+
+
+def test_launch_count_is_distinct_bitwidths():
+    """Regression: the fused dispatch issues exactly one pallas_call per
+    distinct stripe bit-width — NOT one per stripe."""
+    rng = np.random.default_rng(9)
+    spec = [(2, 40), (4, 56), (2, 24), (3, 32)]   # 4 stripes, 3 bit-widths
+    qt = _make_qt(rng, rows=64, stripe_spec=spec, k_out=1)
+    x = jnp.asarray(rng.normal(size=(5, qt.cols)).astype(np.float32))
+
+    before = dm.launch_count
+    y_unprepared = ops.qmatmul(x, qt, use_kernel=True, interpret=True)
+    unprepared_launches = dm.launch_count - before
+    assert unprepared_launches == len(spec)
+
+    pqt = prepare_for_inference(qt)
+    before = dm.launch_count
+    y_prepared = ops.qmatmul(x, pqt, use_kernel=True, interpret=True)
+    prepared_launches = dm.launch_count - before
+    assert prepared_launches == len({b for b, _ in spec}) == 3
+
+    np.testing.assert_allclose(np.asarray(y_prepared),
+                               np.asarray(y_unprepared),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_plan_cached_on_tensor_and_prepare_tree():
+    rng = np.random.default_rng(3)
+    qt = _make_qt(rng, rows=32, stripe_spec=[(2, 48)])
+    assert qt.prepare() is qt.prepare()
+
+    params = {"layer": {"kernel": qt, "bias": jnp.zeros((32,))},
+              "norm": {"scale": jnp.ones((48,))}}
+    prepared = prepare_tree(params)
+    assert isinstance(prepared["layer"]["kernel"], PreparedQuantizedTensor)
+    assert prepared["norm"]["scale"].shape == (48,)
+    # idempotent: preparing an already-prepared tree is the identity
+    again = prepare_tree(prepared)
+    assert again["layer"]["kernel"] is prepared["layer"]["kernel"]
+
+
+def test_layer_stacked_tensor_preparation():
+    """launch.quantize stacks per-layer QuantizedTensors (leading L dim on
+    every data leaf, per-matrix `shape` meta).  Preparation must vmap over
+    the stack and slice back per layer — the ServingEngine path."""
+    rng = np.random.default_rng(11)
+    spec = [(2, 48), (4, 32)]
+    qts = [_make_qt(np.random.default_rng(100 + i), rows=64,
+                    stripe_spec=spec, k_out=2) for i in range(3)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *qts)
+    assert stacked.stripes[0].packed.ndim == 3
+
+    pst = prepare_for_inference(stacked)
+    assert pst.gather_idx.shape[0] == 3
+    x = jnp.asarray(rng.normal(size=(5, qts[0].cols)).astype(np.float32))
+    for i, qt in enumerate(qts):
+        layer = jax.tree_util.tree_map(lambda a: a[i], pst)
+        np.testing.assert_allclose(np.asarray(layer.dequantize()),
+                                   np.asarray(qt.dequantize()),
+                                   rtol=1e-6, atol=1e-6)
+        y = ops.qmatmul(x, layer, use_kernel=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref_lib.ref_qmatmul(x, qt)),
+                                   rtol=1e-4, atol=1e-3)
+    # prepare_tree hits stacked leaves too (what the engine actually does)
+    tree = prepare_tree({"blocks": {"kernel": stacked}})
+    assert isinstance(tree["blocks"]["kernel"], PreparedQuantizedTensor)
+
+
+def test_prepared_expert_weight_dequant():
+    """MoE expert leaves (leading E axis) prepared by the engine must still
+    materialize through models.moe._expert_weight."""
+    from repro.models.moe import _expert_weight
+    qts = [_make_qt(np.random.default_rng(200 + e), rows=32,
+                    stripe_spec=[(2, 24), (4, 24)], k_out=1)
+           for e in range(2)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *qts)
+    prepared = prepare_for_inference(stacked)
+    w = _expert_weight(prepared, jnp.float32)       # (E, in, out)
+    assert w.shape == (2, 48, 32)
+    for e, qt in enumerate(qts):
+        np.testing.assert_allclose(np.asarray(w[e]),
+                                   np.asarray(qt.dequantize()).T,
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_prepared_tensor_is_a_pytree():
+    """Prepared leaves must flow through jit (the serving engine's params)."""
+    rng = np.random.default_rng(4)
+    qt = _make_qt(rng, rows=64, stripe_spec=[(2, 64), (4, 64)], k_out=2)
+    pqt = prepare_for_inference(qt)
+    x = jnp.asarray(rng.normal(size=(3, qt.cols)).astype(np.float32))
+
+    @jax.jit
+    def f(x, p):
+        return ops.qmatmul(x, p, use_kernel=True, interpret=True)
+
+    y = f(x, pqt)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref_lib.ref_qmatmul(x, qt)),
+                               rtol=1e-4, atol=1e-3)
+    leaves = jax.tree_util.tree_leaves(pqt)
+    assert all(isinstance(l, jax.Array) for l in leaves)
