@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--min-bucket", type=int, default=16,
+                    help="smallest prefill length bucket")
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="admit at exact prompt lengths (one compile each)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -46,20 +50,27 @@ def main():
         print(f"[serve] CLAQ-quantized to {report.mean_effective_bits:.2f} "
               f"bits in {time.time() - t0:.1f}s")
 
-    eng = ServingEngine(params, cfg, n_slots=args.slots, max_len=args.max_len)
+    eng = ServingEngine(params, cfg, n_slots=args.slots,
+                        max_len=args.max_len, min_bucket=args.min_bucket,
+                        bucketing=not args.no_bucketing)
     rng = np.random.default_rng(0)
     pending = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12)).tolist()
                for _ in range(args.requests)]
-    done = 0
     t0 = time.time()
     while pending or eng.active:
-        while pending and eng.free:
-            eng.add_request(pending.pop(0), max_new_tokens=args.max_new)
-        emitted = eng.step()
-        done += sum(1 for uid in emitted if uid not in eng.active)
+        if pending and eng.free:
+            batch = [pending.pop(0)
+                     for _ in range(min(len(pending), len(eng.free)))]
+            eng.add_requests(batch, max_new_tokens=args.max_new)
+        eng.step()
+    done = len(eng.take_finished())
     dt = time.time() - t0
-    print(f"[serve] {args.requests} requests, {dt:.2f}s "
-          f"({args.requests * args.max_new / dt:.1f} tok/s)")
+    st = eng.stats()
+    print(f"[serve] {done} requests, {dt:.2f}s "
+          f"({done * args.max_new / dt:.1f} tok/s)")
+    print(f"[serve] prefill traces {st['prefill_traces']} "
+          f"(buckets {st['buckets']}), compile-cache hit rate "
+          f"{st['bucket_hit_rate']:.0%}")
 
 
 if __name__ == "__main__":

@@ -37,12 +37,18 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill_step(params, cfg: ModelConfig, batch: Dict[str, Array], cache,
-                 unroll: bool = False):
+                 unroll: bool = False, logits_at=None):
+    """``logits_at`` (scalar or (B,) positions) selects which position's
+    logits are returned instead of the default last position — the serving
+    engine passes ``true_len - 1`` when prompts are right-padded to a
+    length bucket."""
     if cfg.family == "encdec":
         return ed.encdec_prefill(params, cfg, batch["frames"],
-                                 batch["tokens"], cache, unroll=unroll)
+                                 batch["tokens"], cache, unroll=unroll,
+                                 logits_at=logits_at)
     return tf.prefill(params, cfg, batch["tokens"], cache,
-                      prefix_embeds=batch.get("prefix_embeds"), unroll=unroll)
+                      prefix_embeds=batch.get("prefix_embeds"), unroll=unroll,
+                      logits_at=logits_at)
 
 
 def decode_step(params, cfg: ModelConfig, token: Array, cache,

@@ -211,7 +211,12 @@ def init_encdec_cache(cfg, batch: int, max_len: int, src_len: int,
 
 
 def encdec_prefill(params, cfg, frames, tokens, cache: EncDecCache,
-                   unroll: bool = False):
+                   unroll: bool = False, logits_at=None):
+    """Decoder prefill over cached encoder states.
+
+    ``logits_at`` (scalar or (B,) positions) selects which decoder
+    position's logits are returned — required when the token prompt is
+    right-padded to a length bucket, where position -1 is padding."""
     enc_out = encode(params, cfg, frames, unroll=unroll)
     x = nn.embed(params["embed"], tokens)
     x, self_kv, (ck, cv) = decode_blocks(
@@ -222,7 +227,7 @@ def encdec_prefill(params, cfg, frames, tokens, cache: EncDecCache,
                             cross_k=ck.astype(cache.cross_k.dtype),
                             cross_v=cv.astype(cache.cross_v.dtype),
                             enc_len=jnp.full((frames.shape[0],), frames.shape[1], jnp.int32))
-    return logits[:, -1], new_cache
+    return L.select_logits(logits, logits_at), new_cache
 
 
 def encdec_decode_step(params, cfg, token: Array, cache: EncDecCache,

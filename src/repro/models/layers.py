@@ -58,6 +58,23 @@ def attn_constrain(q, k, v, q_block: int = 512):
 NEG_INF = -1e30
 
 
+def select_logits(logits: Array, logits_at=None) -> Array:
+    """Pick one position per row from (B, S, V) logits.
+
+    ``logits_at=None`` keeps the legacy contract (last position).  Under
+    right-padded bucketed prefill the last position is a padding token, so
+    the serving engine passes the true last-token index per row (``n-1``,
+    scalar or (B,)); it is consumed as a traced operand, so varying true
+    lengths inside one bucket never force a retrace.
+    """
+    if logits_at is None:
+        return logits[:, -1]
+    idx = jnp.asarray(logits_at, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (logits.shape[0],))
+    return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # RoPE
 # ---------------------------------------------------------------------------

@@ -371,10 +371,16 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype), L_)
 
 
-def prefill(params, cfg, tokens, caches, prefix_embeds=None, unroll=False):
+def prefill(params, cfg, tokens, caches, prefix_embeds=None, unroll=False,
+            logits_at=None):
+    """Prefill the cache with a full prompt; returns (logits (B, V), cache).
+
+    ``logits_at`` (scalar or (B,) positions into the sequence axis) selects
+    which position's logits are returned — required when the prompt is
+    right-padded to a length bucket, where position -1 is padding."""
     logits, caches, _ = forward(params, cfg, tokens, prefix_embeds,
                                 caches=caches, unroll=unroll)
-    return logits[:, -1], caches
+    return L.select_logits(logits, logits_at), caches
 
 
 def decode_step(params, cfg, token: Array, caches, unroll: bool = False):

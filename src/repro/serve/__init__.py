@@ -1,1 +1,2 @@
+from .bucketing import BucketingPolicy, BucketStats  # noqa: F401
 from .engine import ServingEngine, Request  # noqa: F401

@@ -1,18 +1,51 @@
 """Batched serving engine: slot-based continuous batching over a fixed-size
-decode batch, with per-request prefill inserted into free slots.
+decode batch, with bucketed prefill admission into free slots.
 
-Weights may be dense or CLAQ-quantized (QuantizedTensor leaves) — the model
-dispatches per leaf, so the same engine serves fp and 2/3/4-bit models.
+Admission pads each prompt to its power-of-2 length bucket
+(serve/bucketing.py), so N distinct prompt lengths cost at most
+``ceil(log2(max_len / min_bucket)) + 1`` prefill traces instead of N at
+any fixed admission batch size; batch sizes are bucketed the same way
+(next power of 2, capped at n_slots), so the total trace count is
+bounded by the product length-buckets x batch-buckets
+(<= ``floor(log2(n_slots)) + 1`` of the latter).
+The prefill reads logits at the true last-token position (``logits_at =
+n - 1``, not ``-1``), and the per-request cache fragment enters the
+batched cache through a masked insert: K/V positions ``n..bucket-1``
+(the padded tail) are zeroed and the fill counter is set to the true
+length ``n``, so decode appends at position ``n`` and the attention mask
+never exposes a padding slot.  ``add_requests`` admits prompts sharing a
+bucket in one batched prefill call (except moe, whose router couples
+rows — it admits one per prefill), with the batch size itself bucketed
+so a drifting free-slot count doesn't mint fresh compiles either.
 
-Flow: add_request() prefills (batch-1, bucketed lengths to bound compiles)
-and writes the per-layer cache fragment into a free slot of the batched
-cache; step() decodes every active slot in one batched serve_step, emits
-one token per active request, and retires finished ones.
+Padding applies to the dense attention family, where causal masking
+makes a padded suffix invisible to valid positions.  Recurrent families
+(rwkv / hybrid) fold every token into their state, and moe's
+capacity-bounded router sees padded tokens (see _PADDED_FAMILIES), so
+those are admitted at exact lengths (bucket == n, grouping still batches
+equal-length prompts).
+
+Weights may be dense or CLAQ-quantized — QuantizedTensor leaves are
+compiled into their ahead-of-time inference plans once at init, and the
+model dispatches per leaf, so the same engine serves fp and 2/3/4-bit
+models.
+
+Flow: add_requests() buckets, pads, and prefills; step() decodes every
+active slot in one batched decode_step and emits one token per active
+request.  Retirement (``max_new_tokens`` reached or EOS sampled) is
+checked wherever a token is appended — including the prefill-sampled
+first token, so a one-token budget or an immediate EOS retires the
+request at admission without entering the decode loop.  Retired requests
+move to ``finished`` (drain with ``take_finished()``).
+
+``prefill_traces`` / ``decode_traces`` count actual XLA traces (a Python
+side effect inside the jitted function runs once per trace); ``stats()``
+reports them next to the bucketing policy's compile-cache accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +54,25 @@ import numpy as np
 from repro.kernels.plan import prepare_tree
 from repro.models import api
 
+from .bucketing import BucketingPolicy
+
 Array = jax.Array
+
+# Families whose caches are position-indexed and masked by a fill counter,
+# making right-padding invisible to valid tokens.  moe is excluded even
+# though its cache is attention-shaped: capacity-bounded routing sees the
+# padded suffix (cap and the group-local cumsum depend on total token
+# count), so padded prefill changes which valid tokens are capacity-dropped
+# — bucketing moe needs a routing mask first.  The same router coupling
+# makes moe prefill rows batch-DEPENDENT, so moe admissions are also never
+# batched together (see add_requests); every other family's prefill rows
+# are independent.
+_PADDED_FAMILIES = ("dense",)
+
+# Cache leaf names with a sequence axis to zero-mask past the true length
+# (KVCache.k/v, MLACache.c_kv/k_pe) vs. fill counters to pin to it.
+_SEQ_LEAVES = ("k", "v", "c_kv", "k_pe")
+_LEN_LEAVES = ("length",)
 
 
 @dataclasses.dataclass
@@ -35,9 +86,52 @@ class Request:
     done: bool = False
 
 
+def _masked_group_insert(full, frag, slots: Sequence[int],
+                         lens: Sequence[int], masked: bool):
+    """Insert the first ``len(slots)`` rows of a prefill cache fragment
+    into the batched cache at ``slots``, keeping only each row's first
+    ``lens[r]`` sequence positions.  One whole-cache copy per admitted
+    GROUP, not per request (the fragment batch may be larger — its tail
+    rows are batch-bucketing dummies and are dropped).
+
+    With `masked` (padded admission): fill counters advanced to the bucket
+    size by the padded prefill are reset to the true lengths, and the
+    padded K/V tail is zeroed — the batched cache ends up bit-identical to
+    an unpadded prefill's.  Leaves are classified by their NamedTuple field
+    name in the pytree key path.
+    """
+    B = len(slots)
+    slots = jnp.asarray(slots, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    def ins(path, fl, fr):
+        name = getattr(path[-1], "name", None)
+        if masked and name in _LEN_LEAVES:
+            if fl.ndim == 1:
+                return fl.at[slots].set(lens.astype(fl.dtype))
+            return fl.at[:, slots].set(
+                jnp.broadcast_to(lens, (fl.shape[0], B)).astype(fl.dtype))
+        if fl.ndim == 1:            # per-slot scalars, e.g. enc_len
+            return fl.at[slots].set(fr[:B])
+        v = fr[:, :B]               # (layers, B, seq?, ...) fragment rows
+        if masked and name in _SEQ_LEAVES:
+            pos = jnp.arange(v.shape[2])
+            keep = (pos[None, :] < lens[:, None]).reshape(
+                (1, B, -1) + (1,) * (v.ndim - 3))
+            v = jnp.where(keep, v, jnp.zeros((), v.dtype))
+        return fl.at[:, slots].set(v)
+
+    return jax.tree_util.tree_map_with_path(ins, full, frag)
+
+
 class ServingEngine:
     def __init__(self, params, cfg, n_slots: int = 8, max_len: int = 1024,
-                 dtype=jnp.float32, prepare: bool = True):
+                 dtype=jnp.float32, prepare: bool = True,
+                 min_bucket: int = 16, bucketing: bool = True):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "ServingEngine serves decoder-only families; encdec "
+                "admission needs a frames input and a length-masked encoder")
         # Compile every QuantizedTensor leaf into its ahead-of-time
         # inference plan ONCE; the prepared leaves then flow through the
         # jitted steps with zero per-trace layout work and one kernel
@@ -46,48 +140,117 @@ class ServingEngine:
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        # Padding additionally requires linear (non-ring) caches: a
+        # sliding-window ring keeps the LAST W keys, so a padded suffix
+        # would evict valid ones and the masked insert's linear-position
+        # zeroing would be meaningless in ring-slot space.
+        self.bucketing = BucketingPolicy(
+            min_bucket=min_bucket, max_len=max_len,
+            enabled=(bucketing and cfg.family in _PADDED_FAMILIES
+                     and cfg.attn_window is None))
         self.cache = api.make_cache(cfg, n_slots, max_len, dtype=dtype)
+        self._cache_dtype = jax.tree_util.tree_leaves(self.cache)[0].dtype
         self.free = list(range(n_slots))
         self.active: Dict[int, Request] = {}
+        self.finished: Dict[int, Request] = {}
         self.last_token = np.zeros((n_slots,), np.int32)
         self._uid = 0
 
-        self._decode = jax.jit(
-            lambda p, t, c: api.decode_step(p, cfg, t, c))
-        # One stable jitted prefill: repeated admissions at the same
-        # bucketed prompt length hit the compile cache instead of
-        # re-tracing through a fresh lambda per request.
-        self._prefill = jax.jit(
-            lambda p, t, c: api.prefill_step(p, cfg, {"tokens": t}, c))
+        # Trace counters: a Python side effect inside a jitted function
+        # runs once per trace, so these count compiles, not calls.
+        self.prefill_traces = 0
+        self.decode_traces = 0
+
+        def _decode_fn(p, t, c):
+            self.decode_traces += 1
+            return api.decode_step(p, cfg, t, c)
+
+        # One stable jitted prefill keyed on the (batch, bucket) operand
+        # shape: admissions at a previously seen shape hit the compile
+        # cache.  True lengths arrive as a traced operand (logits_at), so
+        # they never force a retrace.
+        def _prefill_fn(p, t, c, lens):
+            self.prefill_traces += 1
+            return api.prefill_step(p, cfg, {"tokens": t}, c,
+                                    logits_at=lens - 1)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn)
 
     # ------------------------------------------------------------------ admit
-    def add_request(self, prompt: List[int], max_new_tokens: int = 16,
+    def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
                     eos_id: Optional[int] = None) -> int:
-        if not self.free:
-            raise RuntimeError("no free slots")
-        slot = self.free.pop(0)
-        req = Request(self._uid, list(prompt), max_new_tokens, eos_id,
-                      slot=slot)
-        self._uid += 1
+        return self.add_requests([prompt], max_new_tokens, eos_id)[0]
 
-        n = len(prompt)
-        cache1 = api.make_cache(self.cfg, 1, self.max_len,
-                                dtype=jax.tree_util.tree_leaves(self.cache)[0].dtype)
-        toks = jnp.asarray(prompt, jnp.int32)[None, :]
-        logits, cache1 = self._prefill(self.params, toks, cache1)
-        first = int(jnp.argmax(logits[0]))
-        req.tokens.append(first)
-        self.last_token[slot] = first
+    def add_requests(self, prompts: Sequence[Sequence[int]],
+                     max_new_tokens: int = 16,
+                     eos_id: Optional[int] = None) -> List[int]:
+        """Admit several prompts; those sharing a length bucket are padded
+        to it and prefilled in ONE batched call.  Returns uids in prompt
+        order (look in `active`/`finished` for the Request objects — an
+        immediate EOS or a one-token budget retires at admission)."""
+        if len(prompts) > len(self.free):
+            raise RuntimeError(
+                f"need {len(prompts)} free slots, have {len(self.free)}")
+        # moe prefill rows are coupled through router capacity (a row's
+        # tokens change which of another row's tokens are dropped), so moe
+        # admissions run one per prefill to match per-request admission;
+        # all other families' rows are independent and share a call.
+        batch_safe = self.cfg.family != "moe"
+        groups: Dict[Any, List[int]] = {}
+        for i, prompt in enumerate(prompts):
+            if len(prompt) == 0:
+                raise ValueError("empty prompt")
+            bucket = self.bucketing.bucket_for(len(prompt))
+            groups.setdefault(bucket if batch_safe else (bucket, i),
+                              []).append(i)
 
-        # insert the fragment into the batched cache at `slot`
-        def insert(full, frag):
-            if frag.ndim == 1:          # per-slot scalars, e.g. enc_len
-                return full.at[slot].set(frag[0])
-            return full.at[:, slot].set(frag[:, 0])
+        uids: List[int] = [-1] * len(prompts)
+        for key, idxs in groups.items():
+            bucket = key if batch_safe else key[0]
+            B = len(idxs)
+            # The batch size is bucketed too (next power of 2, capped at
+            # n_slots): the jit cache is keyed on the (batch, bucket)
+            # operand shape, so a drifting free-slot count must not mint
+            # fresh compiles.  Dummy tail rows prefill garbage that is
+            # never inserted.
+            Bb = min(1 << (B - 1).bit_length(), self.n_slots)
+            toks = np.zeros((Bb, bucket), np.int32)
+            lens = np.ones((Bb,), np.int32)
+            for r, i in enumerate(idxs):
+                toks[r, :len(prompts[i])] = prompts[i]
+                lens[r] = len(prompts[i])
+            self.bucketing.record(Bb, bucket)
+            cache_b = api.make_cache(self.cfg, Bb, self.max_len,
+                                     dtype=self._cache_dtype)
+            logits, cache_b = self._prefill(
+                self.params, jnp.asarray(toks), cache_b, jnp.asarray(lens))
+            firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            slots = [self.free.pop(0) for _ in idxs]
+            self.cache = _masked_group_insert(
+                self.cache, cache_b, slots, lens[:B].tolist(),
+                self.bucketing.enabled)
+            for r, i in enumerate(idxs):
+                req = Request(self._uid, list(prompts[i]), max_new_tokens,
+                              eos_id, slot=slots[r])
+                self._uid += 1
+                self.active[req.uid] = req
+                self._append_token(req, int(firsts[r]))
+                uids[i] = req.uid
+        return uids
 
-        self.cache = jax.tree_util.tree_map(insert, self.cache, cache1)
-        self.active[req.uid] = req
-        return req.uid
+    def _append_token(self, req: Request, t: int) -> None:
+        """Append a sampled token and apply retirement — the single place
+        the max_new_tokens / EOS check lives, so the prefill-sampled first
+        token is held to the same budget as decode-step tokens."""
+        req.tokens.append(t)
+        self.last_token[req.slot] = t
+        if (len(req.tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and t == req.eos_id)):
+            req.done = True
+            self.free.append(req.slot)
+            del self.active[req.uid]
+            self.finished[req.uid] = req
 
     # ------------------------------------------------------------------- step
     def step(self) -> Dict[int, int]:
@@ -100,18 +263,41 @@ class ServingEngine:
         emitted = {}
         for uid, req in list(self.active.items()):
             t = int(nxt[req.slot])
-            req.tokens.append(t)
-            self.last_token[req.slot] = t
             emitted[uid] = t
-            if (len(req.tokens) >= req.max_new_tokens
-                    or (req.eos_id is not None and t == req.eos_id)):
-                req.done = True
-                self.free.append(req.slot)
-                del self.active[uid]
+            self._append_token(req, t)
         return emitted
 
-    def run_to_completion(self, max_steps: int = 256) -> None:
+    def run_to_completion(self, max_steps: int = 256,
+                          strict: bool = True) -> List[int]:
+        """Decode until every active request retires.  Returns the uids
+        still active when max_steps runs out ([] == all finished); with
+        strict=True (default) exhausting max_steps raises instead, so a
+        truncated run cannot be mistaken for completion."""
         for _ in range(max_steps):
             if not self.active:
-                break
+                return []
             self.step()
+        unfinished = sorted(self.active)
+        if unfinished and strict:
+            raise RuntimeError(
+                f"run_to_completion: max_steps={max_steps} exhausted with "
+                f"{len(unfinished)} requests still active (uids "
+                f"{unfinished})")
+        return unfinished
+
+    # ------------------------------------------------------------------ stats
+    def take_finished(self) -> Dict[int, Request]:
+        """Drain and return retired requests (bounds engine memory)."""
+        out, self.finished = self.finished, {}
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        s = self.bucketing.stats
+        return {
+            "prefill_traces": self.prefill_traces,
+            "decode_traces": self.decode_traces,
+            "buckets": list(self.bucketing.buckets()),
+            "bucket_hits": s.hits,
+            "bucket_misses": s.misses,
+            "bucket_hit_rate": s.hit_rate,
+        }
