@@ -196,6 +196,26 @@ def _derive_trip_count(comps, parent: List[_Instr], while_line: str,
     return max(bound - start, 0)
 
 
+def collective_instructions(text: str):
+    """Every collective instruction in the module (all computations, loop
+    bodies included, each listed ONCE — no trip-count multiplication) as
+    ``[(kind, result_bytes), ...]``.
+
+    `analyze_hlo` aggregates collective bytes; this keeps them
+    per-instruction so tests can assert *size classes* — e.g. the
+    multi-device serving test asserts no single all-gather result is
+    weight-sized (decode must move activations between shards, never the
+    sharded CLAQ plan payload)."""
+    out = []
+    for comp, instrs in _parse_computations(text).items():
+        if comp == "__entry__":
+            continue
+        for ins in instrs:
+            if ins.op in _COLLECTIVES:
+                out.append((ins.op, _result_bytes(ins.line)))
+    return out
+
+
 def analyze_hlo(text: str) -> Dict[str, float]:
     comps = _parse_computations(text)
     entry = comps.get("__entry__", [])

@@ -3,10 +3,20 @@
 A *rule* is `rule(name, shape, cfg, ax) -> PartitionSpec`, applied per leaf
 by `with_shardings` (ShapeDtypeStruct trees, dry-run lowering) or
 `tree_shardings` (concrete trees, device_put).  Rules are divisibility-
-guarded so the same rule set covers every arch family and the CLAQ
-QuantizedTensor leaves (packed planes / codebooks / outlier tables) without
-per-arch special cases: a dimension is only sharded when the mesh axis
-divides it, otherwise it stays replicated.
+guarded so the same rule set covers every arch family: a dimension is only
+sharded when the mesh axis divides it, otherwise it stays replicated.
+
+CLAQ quantized leaves are NOT per-leaf shardable: a
+`PreparedQuantizedTensor` is a *unit* — packed code planes, per-group
+codebooks, outlier tables, and one fused gather index whose layouts are
+coupled (kernels/plan.py).  Splitting its leaves independently (the
+generic largest-dim pick) would shard planes along K, the gather index
+along its only axis, and codebooks along the centroid axis — tearing the
+plan apart.  `spec_for_quantized` shards the unit along N instead: planes
+split on their packed-row axis (whole (bn, bk) tiles per shard, guarded by
+`PreparedQuantizedTensor.shards_whole_tiles`), everything K-indexed or
+row-index-valued replicated.  `tree_shardings` / `with_shardings` route
+quantized units through this rule automatically.
 """
 from __future__ import annotations
 
@@ -42,12 +52,78 @@ def _shardable(dim: int, size: int) -> bool:
     return size > 1 and dim >= size and dim % size == 0
 
 
+def _quantized_types():
+    """Lazy import: dist must stay importable before kernels/core finish
+    initializing (core pulls dist.compat for the sharded quantizer)."""
+    from repro.core.quantized import QuantizedTensor
+    from repro.kernels.plan import PreparedQuantizedTensor
+    return QuantizedTensor, PreparedQuantizedTensor
+
+
+# leaf fields of QuantizedTensor / PreparedQuantizedTensor / PlanGroup — a
+# per-leaf rule must never invent a spec for these (see spec_for_quantized)
+_QUANT_LEAF_MARKERS = (".groups[", ".planes[", ".gather_idx", ".codebook",
+                      ".out_idx", ".out_val", ".stripes[", ".col_perm",
+                      ".out_count", ".packed")
+
+
+def spec_for_quantized(q, ax: MeshAxes):
+    """Spec *tree* (same pytree structure as `q`) for one quantized unit.
+
+    PreparedQuantizedTensor: sharded as a unit along N over "model" —
+      * code planes split on their packed-row axis (axis -2; one packed
+        word = 32/width consecutive rows of one column, and bn is a
+        multiple of the 32-row word, so a bn-aligned split is word-aligned
+        and every shard keeps whole (bn, bk) tiles);
+      * `codebook` / `out_idx` / `out_val` are K-indexed (and outlier idx
+        *values* are global row numbers), `gather_idx` indexes the
+        activation's K axis — all replicated;
+      * guarded by `shards_whole_tiles(model_size)`: when the tile count
+        does not divide, the WHOLE unit stays replicated — never torn;
+      * stacked (L, ...) / (L, E, ...) leaves (launch.quantize stacks
+        per-layer results; the plan vmaps, so meta is per-matrix) shard
+        the same axis -2, leading stack dims untouched.
+
+    Raw QuantizedTensor: replicated as a unit.  It is the pre-deployment
+    format (3-bit packs two planes concatenated along packed rows, so no
+    row split is tile-clean); serving prepares leaves before sharding, and
+    the row-sharded *quantizer* manages its own mesh explicitly.
+    """
+    QuantizedTensor, PreparedQuantizedTensor = _quantized_types()
+
+    if (isinstance(q, PreparedQuantizedTensor)
+            and ax.model_size > 1
+            and q.shards_whole_tiles(ax.model_size)):
+        model = ax.model
+
+        def one(path, leaf):
+            field = getattr(path[-2] if len(path) > 1 else path[-1],
+                            "name", None)
+            if field == "planes":
+                ndim = np.ndim(leaf)
+                entries = [None] * ndim
+                entries[ndim - 2] = model
+                return PartitionSpec(*entries)
+            return PartitionSpec()
+
+        return jax.tree_util.tree_map_with_path(one, q)
+
+    if not isinstance(q, (QuantizedTensor, PreparedQuantizedTensor)):
+        raise TypeError(f"not a quantized unit: {type(q)}")
+    return jax.tree_util.tree_map(lambda _: PartitionSpec(), q)
+
+
 def spec_for_param(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
     """Tensor-parallel params: shard the largest model-divisible dimension
     over "model"; everything else replicated.  Covers dense kernels
-    (in, out), stacked (L, in, out), embeddings (vocab, d), and quantized
-    leaves (packed planes / codebooks / outlier tables) uniformly."""
+    (in, out), stacked (L, in, out), and embeddings (vocab, d).  Quantized
+    leaves are NOT covered here — `tree_shardings` / `with_shardings`
+    route whole QuantizedTensor / PreparedQuantizedTensor units through
+    `spec_for_quantized`; if a caller maps this rule over raw quantized
+    internals anyway, they are replicated rather than torn."""
     if not shape or ax.model_size <= 1:
+        return PartitionSpec()
+    if any(m in name for m in _QUANT_LEAF_MARKERS):
         return PartitionSpec()
     candidates = [d for d, dim in enumerate(shape)
                   if _shardable(dim, ax.model_size)]
@@ -73,15 +149,23 @@ def spec_for_batch(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
 
 
 def spec_for_cache(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
-    """KV/state caches: batch dim over "dp"; the head/state dim (axis -2 of
-    rank>=3 leaves, e.g. (B, S, KH, D) kv or (B, H, N, N) wkv state) over
-    "model" when divisible."""
+    """KV/state caches in the engine/dry-run layout: leaves are stacked
+    along a leading layer axis — (L, B, ...) data, (L, B) fill counters —
+    so the batch (serving slot) axis is axis 1, sharded over "dp".  The KV
+    head axis of plain attention caches ((L, B, S, KH, D) leaves named
+    k/v, and the encdec cross_k/cross_v banks) additionally shards over
+    "model", matching the head-parallel attention constraint; every other
+    axis (layer, sequence, feature / state dims that decode indexes
+    dynamically) stays replicated."""
     if not shape:
         return PartitionSpec()
     entries = [None] * len(shape)
-    if _shardable(shape[0], ax.dp_size):
-        entries[0] = ax.dp
-    if len(shape) >= 3 and _shardable(shape[-2], ax.model_size):
+    batch_axis = 1 if len(shape) >= 2 else 0
+    if _shardable(shape[batch_axis], ax.dp_size):
+        entries[batch_axis] = ax.dp
+    field = name.rsplit(".", 1)[-1] if "." in name else name
+    if (field in ("k", "v", "cross_k", "cross_v") and len(shape) == 5
+            and _shardable(shape[-2], ax.model_size)):
         entries[-2] = ax.model
     return PartitionSpec(*entries)
 
@@ -90,24 +174,42 @@ def _leaf_name(path) -> str:
     return jax.tree_util.keystr(path)
 
 
+def _is_quantized_unit(leaf) -> bool:
+    QuantizedTensor, PreparedQuantizedTensor = _quantized_types()
+    return isinstance(leaf, (QuantizedTensor, PreparedQuantizedTensor))
+
+
 def tree_shardings(tree, rule, cfg, mesh):
-    """Tree of NamedShardings for `tree` (concrete or SDS leaves)."""
+    """Tree of NamedShardings for `tree` (concrete or SDS leaves).
+    Quantized units expand to a matching sub-tree via spec_for_quantized,
+    so the result stays leaf-congruent with `tree` (device_put-ready)."""
     ax = MeshAxes(mesh)
 
     def one(path, leaf):
+        if _is_quantized_unit(leaf):
+            return jax.tree_util.tree_map(
+                lambda spec: NamedSharding(mesh, spec),
+                spec_for_quantized(leaf, ax))
         return NamedSharding(mesh, rule(_leaf_name(path), np.shape(leaf),
                                         cfg, ax))
 
-    return jax.tree_util.tree_map_with_path(one, tree)
+    return jax.tree_util.tree_map_with_path(one, tree,
+                                            is_leaf=_is_quantized_unit)
 
 
 def with_shardings(tree, rule, cfg, mesh):
     """ShapeDtypeStruct tree re-annotated with NamedShardings (dry-run)."""
     ax = MeshAxes(mesh)
 
-    def one(path, leaf):
-        spec = rule(_leaf_name(path), leaf.shape, cfg, ax)
+    def sds(leaf, spec):
         return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
                                     sharding=NamedSharding(mesh, spec))
 
-    return jax.tree_util.tree_map_with_path(one, tree)
+    def one(path, leaf):
+        if _is_quantized_unit(leaf):
+            return jax.tree_util.tree_map(sds, leaf,
+                                          spec_for_quantized(leaf, ax))
+        return sds(leaf, rule(_leaf_name(path), leaf.shape, cfg, ax))
+
+    return jax.tree_util.tree_map_with_path(one, tree,
+                                            is_leaf=_is_quantized_unit)

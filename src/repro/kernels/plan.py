@@ -96,6 +96,26 @@ class PreparedQuantizedTensor:
     def cols(self) -> int:
         return self.shape[1]
 
+    @property
+    def n_tiles(self) -> int:
+        """Whole (bn, ·) output tiles along N — the unit in which the plan
+        may be split across devices."""
+        return self.n_padded // self.bn
+
+    def shards_whole_tiles(self, parts: int) -> bool:
+        """True iff splitting N into `parts` equal contiguous shards keeps
+        whole (bn, bk) tiles on every shard.  The plan layout packs codes
+        along the row axis in 32/width-code words and pads N to bn, so an
+        N split at a bn boundary is word-aligned for every plane width iff
+        bn is a multiple of the full 32-row packing word — plans built
+        with a smaller or unaligned bn cap replicate (a width-1 plane
+        packs 32 rows per word, so e.g. bn=16 tile boundaries fall
+        mid-word).  dist/sharding.spec_for_quantized uses this as the
+        divisibility guard: shard the unit along N only when every shard
+        keeps whole word-aligned tiles, otherwise replicate the whole
+        unit — never tear it."""
+        return parts > 1 and self.bn % 32 == 0 and self.n_tiles % parts == 0
+
     def dequantize(self, dtype=jnp.float32) -> Array:
         """Reference dequantization from the *prepared* layout (oracle for
         plan-vs-tensor parity tests; also serves materialize_kernel)."""

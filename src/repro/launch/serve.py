@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama1_7b --smoke \
       --bits 3 --requests 8
+
+Multi-device serving: ``--mesh-shape 2x4`` (or ``--dp 2 --tp 4``) builds a
+(data, model) mesh and wires the engine onto it — prepared CLAQ plans
+shard along N over "model" (whole (bn, bk) tile groups per shard), the
+slot cache shards over "dp".  On a single host, force device count first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
@@ -20,6 +26,29 @@ from repro.models import api
 from repro.serve import ServingEngine
 
 
+def _build_mesh(args):
+    """Resolve --mesh-shape / --dp / --tp into a (data, model) mesh, or
+    None for single-device serving."""
+    if args.mesh_shape:
+        try:
+            dp, tp = (int(v) for v in args.mesh_shape.lower().split("x"))
+        except ValueError as e:
+            raise SystemExit(
+                f"--mesh-shape must be DPxTP (e.g. 2x4), got "
+                f"{args.mesh_shape!r}") from e
+    else:
+        dp, tp = max(args.dp, 1), max(args.tp, 1)
+    if dp * tp <= 1:
+        return None
+    n_dev = len(jax.devices())
+    if dp * tp > n_dev:
+        raise SystemExit(
+            f"mesh {dp}x{tp} needs {dp * tp} devices, have {n_dev} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"to emulate on one host)")
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -34,6 +63,13 @@ def main():
                     help="smallest prefill length bucket")
     ap.add_argument("--no-bucketing", action="store_true",
                     help="admit at exact prompt lengths (one compile each)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="DPxTP device mesh, e.g. 2x4 (data x model)")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="data-parallel mesh size (alternative to "
+                         "--mesh-shape)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor(model)-parallel mesh size")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -50,24 +86,44 @@ def main():
         print(f"[serve] CLAQ-quantized to {report.mean_effective_bits:.2f} "
               f"bits in {time.time() - t0:.1f}s")
 
+    mesh = _build_mesh(args)
+    if mesh is not None:
+        print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
+
     eng = ServingEngine(params, cfg, n_slots=args.slots,
                         max_len=args.max_len, min_bucket=args.min_bucket,
-                        bucketing=not args.no_bucketing)
+                        bucketing=not args.no_bucketing, mesh=mesh)
     rng = np.random.default_rng(0)
     pending = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12)).tolist()
                for _ in range(args.requests)]
     t0 = time.time()
+    steps = 0
+    step_tokens = 0
+    t_decode = 0.0
     while pending or eng.active:
         if pending and eng.free:
             batch = [pending.pop(0)
                      for _ in range(min(len(pending), len(eng.free)))]
             eng.add_requests(batch, max_new_tokens=args.max_new)
-        eng.step()
-    done = len(eng.take_finished())
+        ts = time.time()
+        emitted = eng.step()
+        if emitted:
+            steps += 1
+            step_tokens += len(emitted)
+            t_decode += time.time() - ts
+    finished = eng.take_finished()
     dt = time.time() - t0
+    # Throughput counts tokens actually emitted — EOS can retire a request
+    # before its max_new_tokens budget, so `done * max_new` overcounts.
+    total_tokens = sum(len(r.tokens) for r in finished.values())
     st = eng.stats()
-    print(f"[serve] {done} requests, {dt:.2f}s "
-          f"({done * args.max_new / dt:.1f} tok/s)")
+    print(f"[serve] {len(finished)} requests, {total_tokens} tokens, "
+          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+    if steps:
+        print(f"[serve] {steps} decode steps, "
+              f"{step_tokens / steps:.2f} tokens/step, "
+              f"{t_decode / steps * 1e3:.1f} ms/step "
+              f"({step_tokens / max(t_decode, 1e-9):.1f} decode tok/s)")
     print(f"[serve] prefill traces {st['prefill_traces']} "
           f"(buckets {st['buckets']}), compile-cache hit rate "
           f"{st['bucket_hit_rate']:.0%}")

@@ -30,6 +30,25 @@ compiled into their ahead-of-time inference plans once at init, and the
 model dispatches per leaf, so the same engine serves fp and 2/3/4-bit
 models.
 
+Multi-device serving: pass ``mesh=`` (e.g. ``jax.make_mesh((2, 4),
+("data", "model"))``) and the engine device_puts the prepared params with
+``dist.sharding`` rules — PreparedQuantizedTensor units split along N over
+"model" with whole (bn, bk) tiles per shard, dense leaves by the generic
+TP rule — shards the slot cache over "dp" (plus KV heads over "model"),
+and runs the hoisted prefill/decode jits under ``dist.context.use_mesh``
+so the layer-level sharding constraints activate.  Decode stays
+weight-resident: each shard dequantizes only its own N slice, so the step
+moves activations, never weights (asserted on compiled HLO in
+tests/test_dist_serving.py via ``lower_decode()``).
+
+Admission validates the cache budget: a request needs ``len(prompt) +
+max_new_tokens <= max_len`` slots (the prompt plus every generated token
+fed back through decode), otherwise decode would write past the cache end
+where the update clamps/drops — silently corrupting the last K/V
+position.  As a belt-and-braces guard (budgets mutated mid-flight,
+streaming extensions), ``step()`` retires any request whose slot cache is
+full before its budget, marking it ``truncated``.
+
 Flow: add_requests() buckets, pads, and prefills; step() decodes every
 active slot in one batched decode_step and emits one token per active
 request.  Retirement (``max_new_tokens`` reached or EOS sampled) is
@@ -44,6 +63,7 @@ reports them next to the bucketing policy's compile-cache accounting.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -51,6 +71,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import context as dctx
+from repro.dist import sharding as shd
 from repro.kernels.plan import prepare_tree
 from repro.models import api
 
@@ -84,6 +106,7 @@ class Request:
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    truncated: bool = False   # retired because the slot cache filled first
 
 
 def _masked_group_insert(full, frag, slots: Sequence[int],
@@ -127,7 +150,9 @@ def _masked_group_insert(full, frag, slots: Sequence[int],
 class ServingEngine:
     def __init__(self, params, cfg, n_slots: int = 8, max_len: int = 1024,
                  dtype=jnp.float32, prepare: bool = True,
-                 min_bucket: int = 16, bucketing: bool = True):
+                 min_bucket: int = 16, bucketing: bool = True,
+                 mesh=None, plan_bn: Optional[int] = None,
+                 plan_bk: Optional[int] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
@@ -135,11 +160,20 @@ class ServingEngine:
         # Compile every QuantizedTensor leaf into its ahead-of-time
         # inference plan ONCE; the prepared leaves then flow through the
         # jitted steps with zero per-trace layout work and one kernel
-        # launch per distinct stripe bit-width.
-        self.params = prepare_tree(params) if prepare else params
+        # launch per distinct stripe bit-width.  plan_bn / plan_bk cap the
+        # kernel block sizes (deployment tuning knob; smaller bn also
+        # lowers the whole-tile granularity at which plans shard over
+        # "model").
+        prep_kw = {}
+        if plan_bn is not None:
+            prep_kw["bn"] = plan_bn
+        if plan_bk is not None:
+            prep_kw["bk"] = plan_bk
+        self.params = prepare_tree(params, **prep_kw) if prepare else params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self.mesh = mesh
         # Padding additionally requires linear (non-ring) caches: a
         # sliding-window ring keeps the LAST W keys, so a padded suffix
         # would evict valid ones and the masked insert's linear-position
@@ -149,6 +183,20 @@ class ServingEngine:
             enabled=(bucketing and cfg.family in _PADDED_FAMILIES
                      and cfg.attn_window is None))
         self.cache = api.make_cache(cfg, n_slots, max_len, dtype=dtype)
+        self._cache_shardings = None
+        if mesh is not None:
+            # Shard params by the serve TP rule (quantized units split
+            # along N as whole tile groups, dense leaves by largest
+            # model-divisible dim) and the slot cache over "dp" (+ KV
+            # heads over "model").  The cache shardings are kept: eager
+            # admission inserts produce mixed placements, so the cache is
+            # re-pinned after every insert (see add_requests).
+            self.params = jax.device_put(
+                self.params, shd.tree_shardings(
+                    self.params, shd.spec_for_param_serve, cfg, mesh))
+            self._cache_shardings = shd.tree_shardings(
+                self.cache, shd.spec_for_cache, cfg, mesh)
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
         self._cache_dtype = jax.tree_util.tree_leaves(self.cache)[0].dtype
         self.free = list(range(n_slots))
         self.active: Dict[int, Request] = {}
@@ -177,6 +225,27 @@ class ServingEngine:
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn)
 
+    @contextlib.contextmanager
+    def _mesh_scope(self):
+        """Activate the engine's mesh around jit calls so the layer-level
+        `dist.context.constrain` hints apply inside the traces; a no-op
+        for single-device engines."""
+        if self.mesh is None:
+            yield
+            return
+        with self.mesh, dctx.use_mesh(self.mesh):
+            yield
+
+    def lower_decode(self):
+        """AOT-lower the decode step against the engine's CURRENT
+        params/cache (sharded when a mesh is wired) — for HLO inspection:
+        tests assert the compiled step contains no weight-sized all-gather
+        (decode stays weight-resident per shard).  Note: lowering traces,
+        so it bumps `decode_traces`."""
+        toks = jnp.asarray(self.last_token, jnp.int32)
+        with self._mesh_scope():
+            return self._decode.lower(self.params, toks, self.cache)
+
     # ------------------------------------------------------------------ admit
     def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
                     eos_id: Optional[int] = None) -> int:
@@ -201,6 +270,17 @@ class ServingEngine:
         for i, prompt in enumerate(prompts):
             if len(prompt) == 0:
                 raise ValueError("empty prompt")
+            if len(prompt) + max_new_tokens > self.max_len:
+                # The slot cache must hold the prompt plus every generated
+                # token fed back through decode; past max_len the K/V
+                # update clamps/drops, silently corrupting the last cache
+                # position — reject at admission instead.
+                raise ValueError(
+                    f"request does not fit its slot cache: {len(prompt)} "
+                    f"prompt + {max_new_tokens} new tokens > max_len="
+                    f"{self.max_len}; shorten the prompt, lower "
+                    f"max_new_tokens, or build the engine with a larger "
+                    f"max_len")
             bucket = self.bucketing.bucket_for(len(prompt))
             groups.setdefault(bucket if batch_safe else (bucket, i),
                               []).append(i)
@@ -223,13 +303,21 @@ class ServingEngine:
             self.bucketing.record(Bb, bucket)
             cache_b = api.make_cache(self.cfg, Bb, self.max_len,
                                      dtype=self._cache_dtype)
-            logits, cache_b = self._prefill(
-                self.params, jnp.asarray(toks), cache_b, jnp.asarray(lens))
+            with self._mesh_scope():
+                logits, cache_b = self._prefill(
+                    self.params, jnp.asarray(toks), cache_b,
+                    jnp.asarray(lens))
             firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             slots = [self.free.pop(0) for _ in idxs]
             self.cache = _masked_group_insert(
                 self.cache, cache_b, slots, lens[:B].tolist(),
                 self.bucketing.enabled)
+            if self._cache_shardings is not None:
+                # the eager insert mixes the sharded batched cache with the
+                # single-placement prefill fragment; re-pin so the decode
+                # jit keeps one stable input sharding
+                self.cache = jax.device_put(self.cache,
+                                            self._cache_shardings)
             for r, i in enumerate(idxs):
                 req = Request(self._uid, list(prompts[i]), max_new_tokens,
                               eos_id, slot=slots[r])
@@ -239,6 +327,16 @@ class ServingEngine:
                 uids[i] = req.uid
         return uids
 
+    def _retire(self, req: Request, truncated: bool = False) -> None:
+        """Move a request to `finished` and recycle its slot — the single
+        retirement bookkeeping for both the budget/EOS and cache-full
+        paths."""
+        req.done = True
+        req.truncated = truncated
+        self.free.append(req.slot)
+        del self.active[req.uid]
+        self.finished[req.uid] = req
+
     def _append_token(self, req: Request, t: int) -> None:
         """Append a sampled token and apply retirement — the single place
         the max_new_tokens / EOS check lives, so the prefill-sampled first
@@ -247,18 +345,30 @@ class ServingEngine:
         self.last_token[req.slot] = t
         if (len(req.tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and t == req.eos_id)):
-            req.done = True
-            self.free.append(req.slot)
-            del self.active[req.uid]
-            self.finished[req.uid] = req
+            self._retire(req)
 
     # ------------------------------------------------------------------- step
+    def _retire_cache_full(self) -> None:
+        """Retire (truncated) any active request whose slot cache is full
+        before its token budget.  Admission validation makes this
+        unreachable for well-formed requests; it guards budgets mutated
+        mid-flight (streaming extensions) so a full cache retires the
+        request instead of decode silently overwriting the last K/V
+        position.  The slot holds len(prompt) prefill positions plus one
+        write per decode step (len(tokens) - 1 so far; the prefill-sampled
+        first token is written by the first decode step)."""
+        for req in list(self.active.values()):
+            if len(req.prompt) + len(req.tokens) - 1 >= self.max_len:
+                self._retire(req, truncated=True)
+
     def step(self) -> Dict[int, int]:
         """One decode step for all active slots; returns {uid: new_token}."""
+        self._retire_cache_full()
         if not self.active:
             return {}
         toks = jnp.asarray(self.last_token, jnp.int32)
-        logits, self.cache = self._decode(self.params, toks, self.cache)
+        with self._mesh_scope():
+            logits, self.cache = self._decode(self.params, toks, self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         emitted = {}
         for uid, req in list(self.active.items()):
@@ -300,4 +410,5 @@ class ServingEngine:
             "bucket_hits": s.hits,
             "bucket_misses": s.misses,
             "bucket_hit_rate": s.hit_rate,
+            "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
         }

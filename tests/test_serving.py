@@ -245,6 +245,43 @@ def test_slot_reuse_after_retirement(fp_model):
     assert sorted(eng.free) == [0, 1]
 
 
+def test_admission_rejects_cache_overflow(fp_model):
+    """A request whose prompt + token budget exceeds max_len must be
+    rejected at admission: decode would write past the cache end, where
+    the K/V update clamps/drops — silently corrupting the last cache
+    position."""
+    cfg, params = fp_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.add_request(list(range(1, 10)), max_new_tokens=8)   # 9 + 8 > 16
+    # nothing was admitted, no slot leaked
+    assert not eng.active and len(eng.free) == 2
+    # the boundary case fits exactly (the last generated token is never
+    # written back) and must run its full budget
+    uid = eng.add_request(list(range(1, 9)), max_new_tokens=8)  # 8 + 8 == 16
+    eng.run_to_completion()
+    req = eng.take_finished()[uid]
+    assert len(req.tokens) == 8 and not req.truncated
+
+
+def test_cache_full_retires_truncated(fp_model):
+    """Belt-and-braces guard behind admission validation: if a request's
+    budget grows mid-flight (streaming extension), a full slot cache
+    retires it with `truncated` set instead of decode silently
+    overwriting the last K/V position."""
+    cfg, params = fp_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=16)
+    uid = eng.add_request(list(range(1, 9)), max_new_tokens=8)
+    eng.active[uid].max_new_tokens = 100   # simulate a mid-flight extension
+    eng.run_to_completion()
+    req = eng.take_finished()[uid]
+    assert req.done and req.truncated
+    # prefill wrote 8 positions; decode may write the remaining 8, and the
+    # token sampled from the last in-bounds write is still emitted
+    assert len(req.tokens) == 16 - 8 + 1
+    assert len(eng.free) == 2              # slot recycled
+
+
 def test_run_to_completion_surfaces_truncation(fp_model):
     cfg, params = fp_model
     eng = ServingEngine(params, cfg, n_slots=2, max_len=64)
