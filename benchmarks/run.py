@@ -19,6 +19,7 @@ def main() -> None:
 
     from . import tables
     from .kernel_bench import kernel_bench, roofline_rows
+    from .serve_bench import serve_bench
 
     suite = {
         "table1": tables.table1_ppl,
@@ -32,6 +33,7 @@ def main() -> None:
         "table13": tables.table13_calibration,
         "kernel": kernel_bench,
         "roofline": roofline_rows,
+        "serve": serve_bench,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

@@ -1,0 +1,147 @@
+"""Serving-loop benchmark: vanilla vs self-speculative decode.
+
+Wall times on this CPU container are NOT TPU estimates; the structural,
+deterministic quantities are the deliverable: decode STEPS to drain a
+request wave and accepted tokens per step (the decode-cadence multiplier
+speculation buys), draft acceptance rate (how well a 2-bit CLAQ draft
+tracks its higher-bit target when both come from ONE calibration pass),
+and the compile counts proving the speculative path adds a constant
+number of traces.  Greedy speculation is lossless, so the bench also
+ASSERTS token parity between the vanilla and speculative engines — a
+benchmark that cannot silently measure a broken configuration.
+
+The substrate is benchmarks.common.trained_model(): a model trained until
+it clearly beats unigram, so its logits are PEAKED — on a random-init
+model any quantization noise flips the near-uniform argmax and acceptance
+collapses to ~0, which measures nothing.  Target and draft are quantized
+from the model's one set of tapped Hessians (the
+`claq_quantize_with_draft` contract with calibration amortized).
+
+`serve_bench()` writes BENCH_serve.json at the repo root (the serving
+trajectory's counterpart to BENCH_kernel.json); CI runs `--smoke`.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import APConfig, CLAQConfig, ORConfig, draft_config
+from repro.launch.quantize import quantize_model_params
+from repro.serve import ServingEngine, SpecConfig
+
+_BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json")
+
+GAMMAS = (2, 4)
+
+
+def _run(eng, prompts, max_new):
+    """Admit everything, decode to completion; returns (tokens in prompt
+    order, steps, decode seconds)."""
+    uids = eng.add_requests(prompts, max_new_tokens=max_new)
+    steps = 0
+    t_decode = 0.0
+    while eng.active:
+        t0 = time.perf_counter()
+        eng.step()
+        t_decode += time.perf_counter() - t0
+        steps += 1
+    fin = eng.take_finished()
+    return [fin[u].tokens for u in uids], steps, t_decode
+
+
+def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False):
+    from benchmarks.common import trained_model
+
+    cfg, params, hessians = trained_model()
+    qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=4,
+                      gptq_blocksize=32, ap=APConfig(2.2, 2, 4),
+                      orr=ORConfig(0.1))
+    t0 = time.perf_counter()
+    qparams, rep = quantize_model_params(params, cfg, hessians, qcfg)
+    dparams, drep = quantize_model_params(params, cfg, hessians,
+                                          draft_config(qcfg, 2))
+    t_quant = time.perf_counter() - t0
+
+    rng = np.random.default_rng(0)
+    n_req = 4 if smoke else 8
+    max_new = 12 if smoke else 24
+    prompts = [rng.integers(1, cfg.vocab, size=rng.integers(3, 14)).tolist()
+               for _ in range(n_req)]
+
+    def make(spec=None):
+        return ServingEngine(
+            qparams, cfg, n_slots=n_req, max_len=64, min_bucket=8,
+            draft_params=dparams if spec else None, spec=spec)
+
+    rows = []
+    results = {
+        "model": {"arch": "llama1_7b-smoke-trained",
+                  "n_layers": cfg.n_layers, "vocab": cfg.vocab,
+                  "d_model": cfg.d_model},
+        "target_bits": rep.mean_effective_bits,
+        "draft_bits": drep.mean_effective_bits,
+        "quantize_pair_s": t_quant,
+        "requests": n_req,
+        "max_new": max_new,
+        "smoke": smoke,
+    }
+
+    base_tokens, steps, secs = _run(make(), prompts, max_new)
+    total = sum(len(t) for t in base_tokens)
+    results["vanilla"] = {
+        "tokens": total, "steps": steps,
+        "tokens_per_step": total / steps,
+        "ms_per_step": secs / steps * 1e3,
+    }
+    rows.append(("serve/decode_vanilla", secs / steps * 1e6,
+                 f"steps={steps};tokens_per_step={total / steps:.2f}"))
+
+    for gamma in GAMMAS:
+        eng = make(SpecConfig(gamma=gamma, draft_bits=2))
+        toks, steps, secs = _run(eng, prompts, max_new)
+        # greedy speculation is LOSSLESS — a divergence means the bench is
+        # measuring a bug, so fail loudly instead of recording it
+        assert toks == base_tokens, (
+            f"speculative gamma={gamma} diverged from vanilla greedy")
+        st = eng.stats()
+        total = sum(len(t) for t in toks)
+        results[f"spec_gamma{gamma}"] = {
+            "tokens": total, "steps": steps,
+            "tokens_per_step": total / steps,
+            "ms_per_step": secs / steps * 1e3,
+            "acceptance_rate": st["acceptance_rate"],
+            "verify_traces": st["verify_traces"],
+            "draft_decode_traces": st["draft_decode_traces"],
+        }
+        rows.append((f"serve/decode_spec_gamma{gamma}", secs / steps * 1e6,
+                     f"steps={steps};"
+                     f"tokens_per_step={total / steps:.2f};"
+                     f"acceptance={st['acceptance_rate']:.2f}"))
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request count / budgets (CI mode)")
+    ap.add_argument("--out", default=_BENCH_JSON)
+    args = ap.parse_args()
+    serve_bench(out_json=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

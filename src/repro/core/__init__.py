@@ -1,5 +1,5 @@
 """CLAQ core: the paper's contribution as a composable JAX library."""
-from .policy import APConfig, CLAQConfig, ORConfig  # noqa: F401
+from .policy import APConfig, CLAQConfig, ORConfig, draft_config  # noqa: F401
 from .claq import (  # noqa: F401
     MatrixPlan,
     QuantStats,

@@ -72,6 +72,20 @@ class CLAQConfig:
         return self.ap.p_hi if self.ap is not None else self.bits
 
 
+def draft_config(qcfg: CLAQConfig, draft_bits: int) -> CLAQConfig:
+    """Derive the low-bit DRAFT recipe for self-speculative decoding from
+    the target's recipe: same quantization engine knobs (method, K-Means
+    iterations, GPTQ blocksize, damping, codebook mode, metric) so both
+    models come out of one calibration pass, but a flat ``draft_bits``
+    code width — the draft IS the precision floor, so Adaptive Precision
+    is dropped — while Outlier Reservation is kept (a few fp outliers are
+    the cheapest accuracy lever at 2-bit, which is what keeps the draft's
+    argmax tracking the target's)."""
+    if draft_bits < 1:
+        raise ValueError(f"draft_bits must be >= 1, got {draft_bits}")
+    return dataclasses.replace(qcfg, bits=draft_bits, ap=None)
+
+
 def ap_column_bits(R: Array, cfg: APConfig) -> Tuple[Array, float]:
     """Per-column bit-widths for a two-level AP scheme.
 

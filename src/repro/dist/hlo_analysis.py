@@ -12,10 +12,19 @@ analyzer walks the HLO call graph instead:
     at each call site;
   * FLOPs count dot/convolution contractions only (2 * out_elems * K), so
     induction-variable arithmetic never pollutes the figure;
+  * fused elementwise cost is tracked SEPARATELY (`elementwise_flops`):
+    every arithmetic/transcendental elementwise instruction — including
+    those inside fusion bodies, which XLA's cost model reports unevenly —
+    charges `result_elems x op_weight` (1 for add/mul-class ops, 4 for
+    divides/roots, 8 for transcendentals), times the enclosing trip
+    counts.  Memory-bound cells (decode attention softmax, dequant
+    select-accumulate chains) are VPU-heavy, so roofline fractions need
+    this term once the MXU share stops dominating;
   * HBM bytes are a result-bytes proxy per non-trivial instruction;
   * collective bytes are keyed per kind (`coll_all-reduce`, ...).
 
-`analyze_hlo(text)` -> {"flops", "hbm_bytes", "collective_bytes", "coll_*"}.
+`analyze_hlo(text)` -> {"flops", "elementwise_flops", "hbm_bytes",
+"collective_bytes", "coll_*"}.
 """
 from __future__ import annotations
 
@@ -36,6 +45,26 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "bitcast", "after-all", "while", "conditional", "call",
              "partition-id", "replica-id"}
+
+# Elementwise op weights (VPU ops per result element) for the fused
+# elementwise cost.  Coarse three-tier model: cheap ALU ops cost 1,
+# divides/roots 4, transcendentals 8 — the tiers matter for roofline
+# fractions, the exact constants do not.  Data movement (copy, convert,
+# broadcast, reshape, slice, ...) is excluded: it is HBM traffic, already
+# covered by the result-bytes proxy, not arithmetic.
+_ELEMWISE_COST = {}
+for _op in ("add", "subtract", "multiply", "negate", "abs", "maximum",
+            "minimum", "select", "compare", "and", "or", "xor", "not",
+            "clamp", "floor", "ceil", "round-nearest-afz",
+            "round-nearest-even", "sign", "shift-left",
+            "shift-right-logical", "shift-right-arithmetic"):
+    _ELEMWISE_COST[_op] = 1.0
+for _op in ("divide", "remainder", "sqrt", "rsqrt", "cbrt"):
+    _ELEMWISE_COST[_op] = 4.0
+for _op in ("exponential", "exponential-minus-one", "log", "log-plus-one",
+            "tanh", "logistic", "sine", "cosine", "tan", "atan2", "power",
+            "erf"):
+    _ELEMWISE_COST[_op] = 8.0
 
 _COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
@@ -66,6 +95,15 @@ def _shape_elems(dims: str) -> int:
         if d:
             n *= int(d)
     return n
+
+
+def _result_elems(line: str) -> int:
+    """Element count of the result type (first shape token after '=')."""
+    rhs = line.split("=", 1)[1].lstrip() if "=" in line else line
+    m = _SHAPE_RE.search(rhs)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0
+    return _shape_elems(m.group(2))
 
 
 def _result_bytes(line: str) -> int:
@@ -221,8 +259,8 @@ def analyze_hlo(text: str) -> Dict[str, float]:
     entry = comps.get("__entry__", [])
 
     def walk(comp: List[_Instr]) -> Dict[str, float]:
-        acc: Dict[str, float] = {"flops": 0.0, "hbm_bytes": 0.0,
-                                 "collective_bytes": 0.0}
+        acc: Dict[str, float] = {"flops": 0.0, "elementwise_flops": 0.0,
+                                 "hbm_bytes": 0.0, "collective_bytes": 0.0}
         for ins in comp:
             mult = 1
             callees = _CALLEE_RE.findall(ins.line)
@@ -238,6 +276,9 @@ def analyze_hlo(text: str) -> Dict[str, float]:
                     mult = _derive_trip_count(comps, comp, ins.line, cond)
             if ins.op in ("dot", "convolution"):
                 acc["flops"] += _dot_flops(ins.line)
+            cost = _ELEMWISE_COST.get(ins.op)
+            if cost is not None:
+                acc["elementwise_flops"] += cost * _result_elems(ins.line)
             if ins.op not in _FREE_OPS:
                 acc["hbm_bytes"] += _result_bytes(ins.line)
             if ins.op in _COLLECTIVES:

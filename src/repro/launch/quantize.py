@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import CLAQConfig, QuantizedTensor, quantize_matrix
 from repro.core import claq as claq_lib
+from repro.core import policy as policy_lib
 from repro.models import api
 from repro.models import modules as nn
 
@@ -198,3 +199,31 @@ def claq_quantize(params, cfg, calib_tokens, qcfg: CLAQConfig,
     """End-to-end: calibrate + quantize. The paper's full pipeline."""
     hessians = calibrate(params, cfg, calib_tokens, batch_size, extra_batches)
     return quantize_model_params(params, cfg, hessians, qcfg, mesh)
+
+
+def claq_quantize_with_draft(params, cfg, calib_tokens, qcfg: CLAQConfig,
+                             draft_qcfg: Optional[CLAQConfig] = None,
+                             draft_bits: int = 2, batch_size: int = 4,
+                             mesh=None,
+                             extra_batches: Optional[Dict[str, Array]] = None):
+    """ONE calibration pass, TWO quantizations of the same fp weights: the
+    serving target at ``qcfg`` and a low-bit speculative DRAFT at
+    ``draft_qcfg`` (default: `core.draft_config(qcfg, draft_bits)` — flat
+    ``draft_bits`` codes, Outlier Reservation kept, AP dropped).
+
+    Calibration — the eager unrolled model sweep that taps every matrix's
+    (in, in) Hessian — is the expensive, data-touching stage; the second
+    quantization reuses those Hessians verbatim, so the draft model is
+    nearly free and sees EXACTLY the same activation statistics as the
+    target (the draft/target pair self-speculative decoding wants, see
+    serve/speculative.py).
+
+    Returns ``(target_params, target_report), (draft_params,
+    draft_report)``.
+    """
+    hessians = calibrate(params, cfg, calib_tokens, batch_size, extra_batches)
+    target = quantize_model_params(params, cfg, hessians, qcfg, mesh)
+    if draft_qcfg is None:
+        draft_qcfg = policy_lib.draft_config(qcfg, draft_bits)
+    draft = quantize_model_params(params, cfg, hessians, draft_qcfg, mesh)
+    return target, draft

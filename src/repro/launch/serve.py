@@ -21,9 +21,9 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core import APConfig, CLAQConfig, ORConfig
 from repro.data import calibration_set
-from repro.launch.quantize import claq_quantize
+from repro.launch.quantize import claq_quantize, claq_quantize_with_draft
 from repro.models import api
-from repro.serve import ServingEngine
+from repro.serve import ServingEngine, SpecConfig
 
 
 def _build_mesh(args):
@@ -63,6 +63,14 @@ def main():
                     help="smallest prefill length bucket")
     ap.add_argument("--no-bucketing", action="store_true",
                     help="admit at exact prompt lengths (one compile each)")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="speculation window length; 0 = vanilla decode. "
+                         ">0 quantizes a low-bit draft of the same "
+                         "checkpoint from the same calibration pass and "
+                         "serves with propose/verify/rollback windows "
+                         "(lossless for greedy decoding)")
+    ap.add_argument("--draft-bits", type=int, default=2,
+                    help="code bit-width of the speculative draft model")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP device mesh, e.g. 2x4 (data x model)")
     ap.add_argument("--dp", type=int, default=0,
@@ -75,6 +83,9 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
 
+    spec = (SpecConfig(gamma=args.spec_gamma, draft_bits=args.draft_bits)
+            if args.spec_gamma > 0 else None)
+    draft_params = None
     if args.bits > 0:
         base = int(args.bits)
         qcfg = CLAQConfig(
@@ -82,9 +93,32 @@ def main():
             ap=(APConfig(args.bits, base, 4) if args.bits != base else None))
         calib = calibration_set(cfg.vocab, n_segments=8, seq_len=64)
         t0 = time.time()
-        params, report = claq_quantize(params, cfg, calib, qcfg)
-        print(f"[serve] CLAQ-quantized to {report.mean_effective_bits:.2f} "
-              f"bits in {time.time() - t0:.1f}s")
+        if spec is not None:
+            # one calibration pass, two quantizations: the serving target
+            # and the low-bit speculative draft share the tapped Hessians
+            (params, report), (draft_params, drep) = claq_quantize_with_draft(
+                params, cfg, calib, qcfg, draft_bits=spec.draft_bits)
+            print(f"[serve] CLAQ-quantized target to "
+                  f"{report.mean_effective_bits:.2f} bits + draft to "
+                  f"{drep.mean_effective_bits:.2f} bits in "
+                  f"{time.time() - t0:.1f}s (one calibration pass)")
+        else:
+            params, report = claq_quantize(params, cfg, calib, qcfg)
+            print(f"[serve] CLAQ-quantized to "
+                  f"{report.mean_effective_bits:.2f} "
+                  f"bits in {time.time() - t0:.1f}s")
+    elif spec is not None:
+        # fp target: the draft is still a CLAQ quantization of the same
+        # weights, with Outlier Reservation kept — the cheap accuracy
+        # lever that keeps the draft's argmax tracking the target
+        # (core.draft_config's contract)
+        calib = calibration_set(cfg.vocab, n_segments=8, seq_len=64)
+        dcfg = CLAQConfig(bits=args.draft_bits, method="kmeans",
+                          kmeans_iters=6, gptq_blocksize=32,
+                          orr=ORConfig(0.1))
+        draft_params, drep = claq_quantize(params, cfg, calib, dcfg)
+        print(f"[serve] fp target + {drep.mean_effective_bits:.2f}-bit "
+              f"CLAQ draft")
 
     mesh = _build_mesh(args)
     if mesh is not None:
@@ -92,7 +126,8 @@ def main():
 
     eng = ServingEngine(params, cfg, n_slots=args.slots,
                         max_len=args.max_len, min_bucket=args.min_bucket,
-                        bucketing=not args.no_bucketing, mesh=mesh)
+                        bucketing=not args.no_bucketing, mesh=mesh,
+                        draft_params=draft_params, spec=spec)
     rng = np.random.default_rng(0)
     pending = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12)).tolist()
                for _ in range(args.requests)]
@@ -109,7 +144,11 @@ def main():
         emitted = eng.step()
         if emitted:
             steps += 1
-            step_tokens += len(emitted)
+            # speculative steps emit LISTS of accepted tokens per request;
+            # only those count toward throughput (rejected drafts are
+            # rolled back, not served)
+            step_tokens += sum(len(v) if isinstance(v, list) else 1
+                               for v in emitted.values())
             t_decode += time.time() - ts
     finished = eng.take_finished()
     dt = time.time() - t0
@@ -124,6 +163,12 @@ def main():
               f"{step_tokens / steps:.2f} tokens/step, "
               f"{t_decode / steps * 1e3:.1f} ms/step "
               f"({step_tokens / max(t_decode, 1e-9):.1f} decode tok/s)")
+    if spec is not None:
+        print(f"[serve] speculative gamma={spec.gamma} "
+              f"draft_bits={spec.draft_bits}: acceptance rate "
+              f"{st['acceptance_rate']:.0%} "
+              f"({st['spec_accepted']}/{st['spec_drafted']} drafts), "
+              f"{st['tokens_per_step']:.2f} accepted tokens/step")
     print(f"[serve] prefill traces {st['prefill_traces']} "
           f"(buckets {st['buckets']}), compile-cache hit rate "
           f"{st['bucket_hit_rate']:.0%}")

@@ -58,6 +58,21 @@ def decode_step(params, cfg: ModelConfig, token: Array, cache,
     return tf.decode_step(params, cfg, token, cache, unroll=unroll)
 
 
+def validate_span_support(cfg: ModelConfig) -> None:
+    """Raise NotImplementedError unless span decode is exactly equivalent
+    to successive decode steps on this config (see transformer.py)."""
+    tf.validate_span_support(cfg)
+
+
+def decode_span(params, cfg: ModelConfig, tokens: Array, cache,
+                unroll: bool = False):
+    """Speculative verify: append tokens (B, S) at each slot's own cache
+    fill level; returns (logits (B, S, V), cache) — the logits at all S
+    trailing positions from ONE call, bitwise S successive decode_steps.
+    Unsupported configs are rejected by ``validate_span_support``."""
+    return tf.decode_span(params, cfg, tokens, cache, unroll=unroll)
+
+
 # ---------------------------------------------------------------------------
 # Input specs for the dry-run (ShapeDtypeStruct stand-ins, no allocation)
 # ---------------------------------------------------------------------------

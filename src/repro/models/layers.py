@@ -59,20 +59,26 @@ NEG_INF = -1e30
 
 
 def select_logits(logits: Array, logits_at=None) -> Array:
-    """Pick one position per row from (B, S, V) logits.
+    """Pick positions per row from (B, S, V) logits.
 
     ``logits_at=None`` keeps the legacy contract (last position).  Under
     right-padded bucketed prefill the last position is a padding token, so
     the serving engine passes the true last-token index per row (``n-1``,
     scalar or (B,)); it is consumed as a traced operand, so varying true
     lengths inside one bucket never force a retrace.
+
+    A 2-D ``logits_at`` of shape (B, T) selects T positions per row and
+    returns (B, T, V) — one speculative-verify call reads the logits at
+    all γ+1 trailing span positions this way instead of γ+1 calls.
     """
     if logits_at is None:
         return logits[:, -1]
     idx = jnp.asarray(logits_at, jnp.int32)
     if idx.ndim == 0:
         idx = jnp.broadcast_to(idx, (logits.shape[0],))
-    return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    if idx.ndim == 1:
+        return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return jnp.take_along_axis(logits, idx[:, :, None], axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -222,11 +228,20 @@ def gqa_attention(
     cfg,
     cache: Optional[KVCache] = None,
     positions: Optional[Array] = None,
+    span: bool = False,
 ) -> Tuple[Array, Optional[KVCache]]:
     """Standard GQA attention with optional qk-norm, qkv-bias, window.
 
     With a cache: appends S new tokens at cache.length and attends over the
     full cache (decode / chunked prefill).  Without: causal self-attention.
+
+    ``span=True`` (speculative verify, S > 1): the S tokens append at each
+    slot's OWN fill level (per-slot scatter, not the uniform-start chunked
+    prefill) and attention runs the same full-cache masked-softmax path as
+    single-token decode, so a γ-token span is bitwise the computation of γ
+    successive decode steps.  Writes past the cache end are dropped — the
+    admission budget guarantees every *accepted* span position is in
+    bounds, and the rollback zeroes whatever a rejected tail wrote.
     """
     B, S, _ = x.shape
     H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -249,7 +264,9 @@ def gqa_attention(
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     block_spec = None
-    if S > 1:  # train / prefill (decode shards via the cache's own specs)
+    if S > 1 and not span:
+        # train / prefill (decode and span-decode shard via the cache's
+        # own specs)
         q, k, v, block_spec = attn_constrain(q, k, v, cfg.q_block)
 
     window = getattr(cfg, "attn_window", None)
@@ -297,6 +314,20 @@ def gqa_attention(
         new_len = cache.length + 1
         out = _decode_attention(q, k_all, v_all, new_len, window)
         new_cache = KVCache(k_all, v_all, new_len)
+    elif span:
+        # speculative verify: S tokens at per-slot fill levels.  mode="drop"
+        # (not the scatter default of clamping) so a span running past
+        # max_len near the end of a slot's budget cannot overwrite the last
+        # real K/V row — dropped positions belong to draft tokens that can
+        # never be accepted (the admission budget bounds accepted history
+        # at max_len).
+        idx = cache.length[:, None] + jnp.arange(S)[None, :]   # (B, S)
+        k_all = cache.k.at[brange[:, None], idx].set(
+            k.astype(cache.k.dtype), mode="drop")
+        v_all = cache.v.at[brange[:, None], idx].set(
+            v.astype(cache.v.dtype), mode="drop")
+        out = _span_decode_attention(q, k_all, v_all, cache.length, window)
+        new_cache = KVCache(k_all, v_all, cache.length + S)
     else:
         # chunked prefill: uniform fill level assumed across the batch
         start = cache.length[0]
@@ -313,6 +344,34 @@ def gqa_attention(
 
     out = out.reshape(B, S, H * hd)
     return nn.dense(p["o"], out, "o"), new_cache
+
+
+def _span_decode_attention(q, k_cache, v_cache, base_len, window=None):
+    """Multi-token decode (speculative verify): q (B,S,H,D) against the
+    full cache; row s of slot b attends positions < base_len[b] + s + 1
+    (its own K/V included, like decode).  Mirrors `_decode_attention`'s
+    masked-softmax formulation op for op — same einsum contraction per
+    output element, same NEG_INF mask + jax.nn.softmax — so verify logits
+    are bitwise the logits of S successive single-token decode steps
+    (greedy speculative decoding stays lossless at the bit level)."""
+    B, S, H, D = q.shape
+    _, Skv, KH, Dv = v_cache.shape
+    G = H // KH
+    qh = q.transpose(0, 2, 1, 3).reshape(B, KH, G, S, D) * (D ** -0.5)
+    s = jnp.einsum("bkgqd,bskd->bkgqs", qh.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(Skv)
+    lim = jnp.asarray(base_len)[:, None] + jnp.arange(S)[None, :] + 1  # (B,S)
+    mask = pos[None, None, None, None, :] < lim[:, None, None, :, None]
+    if window is not None:
+        mask = mask & (pos[None, None, None, None, :]
+                       > lim[:, None, None, :, None] - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskv->bkgqv", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, H, S, Dv).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
 
 
 def _decode_attention(q, k_cache, v_cache, kv_len, window=None):

@@ -75,6 +75,7 @@ def mla_attention(
     cfg,
     cache: Optional[MLACache] = None,
     positions: Optional[Array] = None,
+    span: bool = False,
 ) -> Tuple[Array, Optional[MLACache]]:
     B, S, _ = x.shape
     H, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
@@ -99,6 +100,21 @@ def mla_attention(
                 k_pe[:, 0].astype(cache.k_pe.dtype))
             new_cache = MLACache(c_all, pe_all, new_len)
             out = _absorbed_decode(p, q_nope, q_pe, c_all, pe_all, new_len, cfg)
+            return nn.dense(p["o"], out.reshape(B, S, H * dv), "o"), new_cache
+        if span:
+            # speculative verify: S latents appended at PER-SLOT fill
+            # levels (mode="drop" past the cache end, like layers.py), then
+            # the absorbed decode generalized over the span axis — bitwise
+            # the computation of S successive absorbed decode steps.
+            brange = jnp.arange(B)
+            idx = cache.length[:, None] + jnp.arange(S)[None, :]
+            c_all = cache.c_kv.at[brange[:, None], idx].set(
+                c_kv.astype(cache.c_kv.dtype), mode="drop")
+            pe_all = cache.k_pe.at[brange[:, None], idx].set(
+                k_pe.astype(cache.k_pe.dtype), mode="drop")
+            new_cache = MLACache(c_all, pe_all, new_len)
+            out = _absorbed_span(p, q_nope, q_pe, c_all, pe_all,
+                                 cache.length, cfg)
             return nn.dense(p["o"], out.reshape(B, S, H * dv), "o"), new_cache
         start = cache.length[0]
         c_all = jax.lax.dynamic_update_slice(
@@ -160,3 +176,34 @@ def _absorbed_decode(p, q_nope, q_pe, c_all, pe_all, kv_len, cfg):
     out = jnp.einsum("bhl,lhv->bhv", ctx.astype(w_uv.dtype), w_uv,
                      preferred_element_type=jnp.float32)
     return out[:, None].astype(q_nope.dtype)  # (B,1,H,dv)
+
+
+def _absorbed_span(p, q_nope, q_pe, c_all, pe_all, base_len, cfg):
+    """`_absorbed_decode` generalized over a span axis: q (B,S,H,·), row s
+    of slot b attends latents at positions < base_len[b] + s + 1.  Every
+    einsum mirrors the decode contraction per output element (same order,
+    same casts), so an S-token verify is bitwise S absorbed decodes."""
+    B, S, H, dn = q_nope.shape
+    dv = cfg.v_head_dim
+    kv_up = nn.materialize_kernel(p["kv_up"])        # (kv_lora, H*(dn+dv))
+    kv_up = kv_up.reshape(cfg.kv_lora, H, dn + dv)
+    w_uk, w_uv = kv_up[..., :dn], kv_up[..., dn:]
+
+    scale = (dn + cfg.rope_head_dim) ** -0.5
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk.astype(q_nope.dtype),
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bqhl,bsl->bqhs", q_abs.astype(c_all.dtype), c_all,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhr,bsr->bqhs", q_pe.astype(pe_all.dtype),
+                       pe_all, preferred_element_type=jnp.float32)
+    s = s * scale
+    lim = jnp.asarray(base_len)[:, None] + jnp.arange(S)[None, :] + 1  # (B,S)
+    mask = (jnp.arange(c_all.shape[1])[None, None, None, :]
+            < lim[:, :, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bqhs,bsl->bqhl", prob.astype(c_all.dtype), c_all,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_nope.dtype)  # (B,S,H,dv)

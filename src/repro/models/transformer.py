@@ -64,13 +64,15 @@ def _block_init(rng, cfg, dtype):
     return p
 
 
-def _attn_block(p, x, cfg, cache):
+def _attn_block(p, x, cfg, cache, span=False):
     h = nn.rms_norm(p["ln1"], x, cfg.norm_eps)
     with nn.scope("attn"):
         if cfg.use_mla:
-            a, new_cache = mla_lib.mla_attention(p["attn"], h, cfg, cache)
+            a, new_cache = mla_lib.mla_attention(p["attn"], h, cfg, cache,
+                                                 span=span)
         else:
-            a, new_cache = L.gqa_attention(p["attn"], h, cfg, cache)
+            a, new_cache = L.gqa_attention(p["attn"], h, cfg, cache,
+                                           span=span)
     x = x + a
     h = nn.rms_norm(p["ln2"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -110,14 +112,14 @@ def _mamba_layer(p, x, cfg, cache):
     return x + m, new_cache, jnp.zeros((), jnp.float32)
 
 
-def block_apply(p, x, cfg, cache=None):
+def block_apply(p, x, cfg, cache=None, span=False):
     x = dctx.constrain(x, "dp", None, None)
     if cfg.family == "rwkv":
         out = _rwkv_block(p, x, cfg, cache)
     elif cfg.family == "hybrid":
         out = _mamba_layer(p, x, cfg, cache)
     else:
-        out = _attn_block(p, x, cfg, cache)
+        out = _attn_block(p, x, cfg, cache, span=span)
     return (dctx.constrain(out[0], "dp", None, None),) + out[1:]
 
 
@@ -166,7 +168,7 @@ def init_params(rng, cfg) -> Dict[str, Any]:
 # Forward
 # ---------------------------------------------------------------------------
 
-def _run_blocks(params, x, cfg, caches, unroll: bool):
+def _run_blocks(params, x, cfg, caches, unroll: bool, span: bool = False):
     """Apply all layers; returns (x, new_caches, aux_sum)."""
     blocks = params["blocks"]
 
@@ -181,7 +183,7 @@ def _run_blocks(params, x, cfg, caches, unroll: bool):
             c_i = (None if caches is None
                    else jax.tree_util.tree_map(lambda a: a[i], caches))
             with nn.scope(f"layers.{i}"):
-                x, c_new, aux = block_apply(p_i, x, cfg, c_i)
+                x, c_new, aux = block_apply(p_i, x, cfg, c_i, span=span)
             aux_sum = aux_sum + aux
             if caches is not None:
                 new_layers.append(c_new)
@@ -212,7 +214,7 @@ def _run_blocks(params, x, cfg, caches, unroll: bool):
         c_i = jax.tree_util.tree_map(
             lambda a: jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
             all_caches)
-        h, c_new, aux = block_apply(p_i, h, cfg, c_i)
+        h, c_new, aux = block_apply(p_i, h, cfg, c_i, span=span)
         all_caches = jax.tree_util.tree_map(
             lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, li, 0),
             all_caches, c_new)
@@ -301,8 +303,13 @@ def forward(
     prefix_embeds: Optional[Array] = None,  # (B, P, D) modality stub
     caches=None,
     unroll: bool = False,
+    span: bool = False,
 ) -> Tuple[Array, Any, Array]:
-    """Returns (logits (B, S_total, V), new_caches, aux_loss)."""
+    """Returns (logits (B, S_total, V), new_caches, aux_loss).
+
+    ``span=True`` (requires caches): the S tokens append at each slot's own
+    cache fill level with decode-identical attention — the speculative
+    verify path (see decode_span)."""
     parts = []
     if prefix_embeds is not None:
         parts.append(prefix_embeds.astype(_dtype(cfg)))
@@ -310,7 +317,7 @@ def forward(
         parts.append(nn.embed(params["embed"], tokens))
     x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
-    x, new_caches, aux = _run_blocks(params, x, cfg, caches, unroll)
+    x, new_caches, aux = _run_blocks(params, x, cfg, caches, unroll, span)
     x = (nn.layer_norm(params["final_norm"], x, cfg.norm_eps)
          if cfg.family == "rwkv"
          else nn.rms_norm(params["final_norm"], x, cfg.norm_eps))
@@ -390,3 +397,51 @@ def decode_step(params, cfg, token: Array, caches, unroll: bool = False):
     logits, caches, _ = forward(params, cfg, token, caches=caches,
                                 unroll=unroll)
     return logits[:, -1], caches
+
+
+def validate_span_support(cfg) -> None:
+    """Single source of truth for which configs support span decode —
+    i.e. where an S-token span call is exactly S successive decode steps
+    and a rejected tail can be rolled back.  Both the `decode_span`
+    primitive and the serving engine's speculation gate
+    (serve/speculative.validate_spec_support) call this, so the two can
+    never drift."""
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "span decode: encdec serving is unsupported (ServingEngine "
+            "rejects the family at construction)")
+    if cfg.family in ("rwkv", "hybrid"):
+        raise NotImplementedError(
+            f"span decode: the {cfg.family} family folds every token into "
+            f"recurrent state (rwkv wkv / the hybrid's mamba2 SSM), which "
+            f"cannot be rolled back after a rejected speculation window; "
+            f"serve it without speculation")
+    if cfg.family == "moe":
+        raise NotImplementedError(
+            "span decode: moe's capacity-bounded router couples the span "
+            "tokens (cap and the group-local cumsum depend on token "
+            "count), so span logits would differ from successive decode "
+            "steps and greedy speculation would not be lossless; serve "
+            "moe without speculation")
+    if cfg.attn_window is not None:
+        raise NotImplementedError(
+            "span decode: a sliding-window ring cache keeps only the LAST "
+            "W keys (slot = position % W) — a span write would clobber "
+            "evicted keys and rollback cannot restore them; serve "
+            "windowed configs without speculation")
+
+
+def decode_span(params, cfg, tokens: Array, caches, unroll: bool = False):
+    """Append S = tokens.shape[1] tokens at each slot's OWN fill level and
+    return the logits at every span position: (B, S, V), new caches.
+
+    The speculative-verify step: one call yields the target model's
+    predictions after each of the γ+1 trailing tokens, bitwise identical
+    to running S successive decode_step calls (the attention path mirrors
+    decode exactly — see layers._span_decode_attention).  Configs where
+    that equivalence cannot hold are rejected by
+    ``validate_span_support``."""
+    validate_span_support(cfg)
+    logits, caches, _ = forward(params, cfg, tokens, caches=caches,
+                                unroll=unroll, span=True)
+    return logits, caches

@@ -1,2 +1,3 @@
 from .bucketing import BucketingPolicy, BucketStats  # noqa: F401
 from .engine import ServingEngine, Request  # noqa: F401
+from .speculative import SpecConfig  # noqa: F401

@@ -57,9 +57,26 @@ first token, so a one-token budget or an immediate EOS retires the
 request at admission without entering the decode loop.  Retired requests
 move to ``finished`` (drain with ``take_finished()``).
 
+Self-speculative decoding: pass ``draft_params=`` (the same checkpoint
+quantized at a lower bit-width from the same calibration pass — see
+``launch.quantize.claq_quantize_with_draft``) and ``spec=SpecConfig(γ)``,
+and ``step()`` becomes a propose/verify/rollback window
+(serve/speculative.py): γ+1 draft decode steps, ONE target span verify
+(``models.api.decode_span``, bitwise γ+1 successive decodes), greedy
+acceptance, and a batched per-slot rollback of both caches
+(``_rollback_tail``: masked K/V tail zeroing + fill-counter rewind,
+the same leaf classification as the bucketed masked insert).  Greedy
+speculation is lossless — emitted tokens, retirement points, and the
+rolled-back cache are bit-identical to vanilla decode (DESIGN.md §8).
+Families that cannot roll back (recurrent state, router-coupled moe,
+ring caches) are rejected at construction.
+
 ``prefill_traces`` / ``decode_traces`` count actual XLA traces (a Python
 side effect inside the jitted function runs once per trace); ``stats()``
 reports them next to the bucketing policy's compile-cache accounting.
+Speculation adds its own counters (``draft_prefill/draft_decode/verify
+_traces``) — all bounded by constants independent of how many windows
+run.
 """
 from __future__ import annotations
 
@@ -76,7 +93,9 @@ from repro.dist import sharding as shd
 from repro.kernels.plan import prepare_tree
 from repro.models import api
 
+from . import speculative
 from .bucketing import BucketingPolicy
+from .speculative import SpecConfig
 
 Array = jax.Array
 
@@ -107,6 +126,35 @@ class Request:
     slot: int = -1
     done: bool = False
     truncated: bool = False   # retired because the slot cache filled first
+
+
+def _rollback_tail(cache, new_lens):
+    """Rewind every slot's fill counter to ``new_lens`` ((B,) int32) and
+    zero the K/V positions at or past it — the per-slot cache rollback a
+    rejected speculation window needs.  Reuses the bucketed-insert leaf
+    classification (`_SEQ_LEAVES` / `_LEN_LEAVES` by NamedTuple field name
+    in the key path), so the rolled-back cache is bit-identical to one
+    that never saw the rejected tail (the tail past a slot's fill is zero
+    from init / the masked insert).  Jitted once in the engine — both the
+    target and the draft cache share the treedef, so one trace serves
+    both; lengths arrive traced, so acceptance patterns never retrace."""
+    new_lens = jnp.asarray(new_lens, jnp.int32)
+
+    def rb(path, leaf):
+        name = getattr(path[-1], "name", None)
+        if name in _LEN_LEAVES:
+            if leaf.ndim == 1:                   # (B,)
+                return new_lens.astype(leaf.dtype)
+            return jnp.broadcast_to(              # (layers, B)
+                new_lens, leaf.shape).astype(leaf.dtype)
+        if name in _SEQ_LEAVES:                  # (layers, B, S, ...)
+            pos = jnp.arange(leaf.shape[2])
+            keep = (pos[None, :] < new_lens[:, None]).reshape(
+                (1,) + leaf.shape[1:3] + (1,) * (leaf.ndim - 3))
+            return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(rb, cache)
 
 
 def _masked_group_insert(full, frag, slots: Sequence[int],
@@ -152,11 +200,21 @@ class ServingEngine:
                  dtype=jnp.float32, prepare: bool = True,
                  min_bucket: int = 16, bucketing: bool = True,
                  mesh=None, plan_bn: Optional[int] = None,
-                 plan_bk: Optional[int] = None):
+                 plan_bk: Optional[int] = None,
+                 draft_params=None, spec: Optional[SpecConfig] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
                 "admission needs a frames input and a length-masked encoder")
+        if spec is not None:
+            speculative.validate_spec_support(cfg)
+            if draft_params is None:
+                raise ValueError(
+                    "speculative decoding needs draft_params (the same "
+                    "checkpoint quantized at SpecConfig.draft_bits — see "
+                    "launch.quantize.claq_quantize_with_draft)")
+        elif draft_params is not None:
+            raise ValueError("draft_params given without spec=SpecConfig(...)")
         # Compile every QuantizedTensor leaf into its ahead-of-time
         # inference plan ONCE; the prepared leaves then flow through the
         # jitted steps with zero per-trace layout work and one kernel
@@ -208,6 +266,18 @@ class ServingEngine:
         # runs once per trace, so these count compiles, not calls.
         self.prefill_traces = 0
         self.decode_traces = 0
+        self.draft_prefill_traces = 0
+        self.draft_decode_traces = 0
+        self.verify_traces = 0
+
+        # Emission counters (all modes): tokens actually appended to
+        # requests, and the engine steps that produced them (decode steps
+        # vanilla, verify windows speculative) — stats() derives
+        # tokens-per-step from these.  Speculation adds drafted/accepted.
+        self.emitted_tokens = 0
+        self.engine_steps = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
         def _decode_fn(p, t, c):
             self.decode_traces += 1
@@ -224,6 +294,53 @@ class ServingEngine:
 
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn)
+
+        # -------- speculative decoding: draft model + verify + rollback --
+        self.spec = spec
+        self.draft_params = None
+        self.draft_cache = None
+        if spec is not None:
+            # The draft rides the same machinery as the target: prepared
+            # CLAQ plans, the same sharding rules, its own slot cache.
+            # Its jits are SEPARATE (draft params have their own pytree
+            # structure — fewer stripes at 2-bit — so they could never
+            # share a compile cache entry with the target anyway) and
+            # carry their own trace counters.
+            self.draft_params = (prepare_tree(draft_params, **prep_kw)
+                                 if prepare else draft_params)
+            self.draft_cache = api.make_cache(cfg, n_slots, max_len,
+                                              dtype=dtype)
+            if mesh is not None:
+                self.draft_params = jax.device_put(
+                    self.draft_params, shd.tree_shardings(
+                        self.draft_params, shd.spec_for_param_serve, cfg,
+                        mesh))
+                self.draft_cache = jax.device_put(self.draft_cache,
+                                                  self._cache_shardings)
+
+            def _draft_decode_fn(p, t, c):
+                self.draft_decode_traces += 1
+                return api.decode_step(p, cfg, t, c)
+
+            def _draft_prefill_fn(p, t, c):
+                self.draft_prefill_traces += 1
+                # cache only: the draft's prefill logits are never read,
+                # and not returning them lets XLA drop the whole-bucket
+                # unembedding matmul from the compiled draft prefill
+                _, cache = api.prefill_step(p, cfg, {"tokens": t}, c)
+                return cache
+
+            def _verify_fn(p, t, c):
+                self.verify_traces += 1
+                return api.decode_span(p, cfg, t, c)
+
+            self._draft_decode = jax.jit(_draft_decode_fn)
+            self._draft_prefill = jax.jit(_draft_prefill_fn)
+            self._verify = jax.jit(_verify_fn)
+            # One rollback trace serves both caches (same treedef/shapes);
+            # per-slot lengths are traced, so acceptance patterns never
+            # mint compiles.
+            self._rollback = jax.jit(_rollback_tail)
 
     @contextlib.contextmanager
     def _mesh_scope(self):
@@ -307,17 +424,32 @@ class ServingEngine:
                 logits, cache_b = self._prefill(
                     self.params, jnp.asarray(toks), cache_b,
                     jnp.asarray(lens))
+                if self.spec is not None:
+                    # the draft needs the prompt in ITS cache too (its
+                    # first proposal continues from the target-sampled
+                    # first token); the draft prefill's logits are unused
+                    dcache_b = api.make_cache(self.cfg, Bb, self.max_len,
+                                              dtype=self._cache_dtype)
+                    dcache_b = self._draft_prefill(
+                        self.draft_params, jnp.asarray(toks), dcache_b)
             firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             slots = [self.free.pop(0) for _ in idxs]
             self.cache = _masked_group_insert(
                 self.cache, cache_b, slots, lens[:B].tolist(),
                 self.bucketing.enabled)
+            if self.spec is not None:
+                self.draft_cache = _masked_group_insert(
+                    self.draft_cache, dcache_b, slots, lens[:B].tolist(),
+                    self.bucketing.enabled)
             if self._cache_shardings is not None:
                 # the eager insert mixes the sharded batched cache with the
                 # single-placement prefill fragment; re-pin so the decode
                 # jit keeps one stable input sharding
                 self.cache = jax.device_put(self.cache,
                                             self._cache_shardings)
+                if self.spec is not None:
+                    self.draft_cache = jax.device_put(self.draft_cache,
+                                                      self._cache_shardings)
             for r, i in enumerate(idxs):
                 req = Request(self._uid, list(prompts[i]), max_new_tokens,
                               eos_id, slot=slots[r])
@@ -361,8 +493,17 @@ class ServingEngine:
             if len(req.prompt) + len(req.tokens) - 1 >= self.max_len:
                 self._retire(req, truncated=True)
 
-    def step(self) -> Dict[int, int]:
-        """One decode step for all active slots; returns {uid: new_token}."""
+    def step(self) -> Dict[int, Any]:
+        """One engine step for all active slots.
+
+        Vanilla: one batched decode, returns ``{uid: new_token}``.  With
+        speculation (``spec=``): one propose/verify/rollback window,
+        returns ``{uid: [tokens]}`` — between 1 and gamma+1 tokens per
+        still-active request, every one of them exactly what vanilla
+        greedy decode would have emitted (greedy speculation is
+        lossless)."""
+        if self.spec is not None:
+            return self._spec_step()
         self._retire_cache_full()
         if not self.active:
             return {}
@@ -375,6 +516,82 @@ class ServingEngine:
             t = int(nxt[req.slot])
             emitted[uid] = t
             self._append_token(req, t)
+        self.engine_steps += 1
+        self.emitted_tokens += len(emitted)
+        return emitted
+
+    def _spec_step(self) -> Dict[int, List[int]]:
+        """One speculation window: γ+1 draft decode steps (the last one
+        write-only, so both caches advance uniformly to fill+γ+1), ONE
+        target span verify, greedy acceptance, then a batched per-slot
+        rollback of both caches to fill+accepted.  Retirement (EOS /
+        max_new_tokens / cache-full) applies token by token in emission
+        order, so a request retires at exactly the token vanilla decode
+        would have retired it at."""
+        self._retire_cache_full()
+        if not self.active:
+            return {}
+        gamma = self.spec.gamma
+        # per-slot fill BEFORE the window: prompt + appended tokens minus
+        # the pending last_token (whose K/V the window itself writes)
+        base_fill = {uid: len(r.prompt) + len(r.tokens) - 1
+                     for uid, r in self.active.items()}
+
+        cur = jnp.asarray(self.last_token, jnp.int32)
+        d_cols = []                                     # device-resident
+        with self._mesh_scope():
+            for j in range(gamma):
+                dlogits, self.draft_cache = self._draft_decode(
+                    self.draft_params, cur, self.draft_cache)
+                cur = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+                d_cols.append(cur)
+            # write-only catch-up: feed d_γ so the draft cache holds it if
+            # the whole window is accepted (logits discarded).  The whole
+            # propose chain stays on device — no host sync until the
+            # verify logits are read below.
+            _, self.draft_cache = self._draft_decode(
+                self.draft_params, cur, self.draft_cache)
+            drafts_j = jnp.stack(d_cols, axis=1)        # (n_slots, γ)
+            span = jnp.concatenate(
+                [jnp.asarray(self.last_token, jnp.int32)[:, None],
+                 drafts_j], axis=1)                     # (n_slots, γ+1)
+            vlogits, self.cache = self._verify(self.params, span, self.cache)
+        drafts = np.asarray(drafts_j)
+        greedy = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
+
+        emitted: Dict[int, List[int]] = {}
+        lens = np.zeros((self.n_slots,), np.int32)   # 0 = free/retired slot
+        for uid, req in list(self.active.items()):
+            s = req.slot
+            k, toks = speculative.accept_greedy(drafts[s], greedy[s])
+            appended: List[int] = []
+            for t in toks:
+                if len(req.prompt) + len(req.tokens) - 1 >= self.max_len:
+                    # same check as _retire_cache_full, applied mid-window:
+                    # the slot cache is full before the budget (mutated
+                    # mid-flight) — later span rows fall past the cache
+                    # end, so stop at exactly the token vanilla would
+                    self._retire(req, truncated=True)
+                    break
+                self._append_token(req, t)
+                appended.append(t)
+                if req.done:
+                    break
+            emitted[uid] = appended
+            self.spec_drafted += gamma
+            self.spec_accepted += k
+            self.emitted_tokens += len(appended)
+            lens[s] = 0 if req.done else base_fill[uid] + len(appended)
+        self.engine_steps += 1
+
+        lens_j = jnp.asarray(lens)
+        with self._mesh_scope():
+            self.cache = self._rollback(self.cache, lens_j)
+            self.draft_cache = self._rollback(self.draft_cache, lens_j)
+        if self._cache_shardings is not None:
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
+            self.draft_cache = jax.device_put(self.draft_cache,
+                                              self._cache_shardings)
         return emitted
 
     def run_to_completion(self, max_steps: int = 256,
@@ -403,7 +620,7 @@ class ServingEngine:
 
     def stats(self) -> Dict[str, Any]:
         s = self.bucketing.stats
-        return {
+        out = {
             "prefill_traces": self.prefill_traces,
             "decode_traces": self.decode_traces,
             "buckets": list(self.bucketing.buckets()),
@@ -411,4 +628,23 @@ class ServingEngine:
             "bucket_misses": s.misses,
             "bucket_hit_rate": s.hit_rate,
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            # decode-loop emission: tokens appended by step() over engine
+            # steps (decode steps vanilla; speculation windows with spec)
+            "emitted_tokens": self.emitted_tokens,
+            "engine_steps": self.engine_steps,
+            "tokens_per_step": (self.emitted_tokens / self.engine_steps
+                                if self.engine_steps else 0.0),
         }
+        if self.spec is not None:
+            out.update({
+                "spec_gamma": self.spec.gamma,
+                "spec_drafted": self.spec_drafted,
+                "spec_accepted": self.spec_accepted,
+                # fraction of proposed draft tokens the target kept
+                "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                    if self.spec_drafted else 0.0),
+                "draft_prefill_traces": self.draft_prefill_traces,
+                "draft_decode_traces": self.draft_decode_traces,
+                "verify_traces": self.verify_traces,
+            })
+        return out

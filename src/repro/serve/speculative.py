@@ -1,0 +1,91 @@
+"""Self-speculative decoding: a low-bit CLAQ draft proposes, the high-bit
+target verifies — lossless, from ONE checkpoint and ONE calibration pass.
+
+CLAQ's premise is that extreme low-bit models stay usable; quantizing the
+same fp weights twice from the same tapped Hessians
+(`launch.quantize.claq_quantize_with_draft`) therefore yields a free
+draft/target pair whose distributions track each other closely — exactly
+the regime where speculative decoding pays.  Greedy speculation is
+mathematically lossless: every emitted token is the TARGET's greedy
+continuation of the previously emitted tokens, regardless of draft
+quality (the draft only sets how many tokens one verify call retires).
+
+Window protocol (γ = SpecConfig.gamma, per engine step):
+
+  propose   γ+1 draft decode steps — feed last_token, then each proposed
+            token; the final step is write-only (it advances the draft
+            cache past d_γ so both caches end the window at fill+γ+1 and
+            one rollback length serves both).
+  verify    ONE target span decode over [last_token, d_1..d_γ]
+            (`models.api.decode_span`, bitwise γ+1 successive decodes).
+  accept    per slot: longest prefix with d_i == g_i (g = target greedy
+            from the verify logits), then the target's correction token
+            g_{k+1} — between 1 and γ+1 tokens per window.
+  rollback  both caches rewind to fill + accepted (masked K/V tail
+            zeroing + fill-counter rewind, `engine._rollback_tail`).
+
+Every phase has a FIXED operand shape — (n_slots,) draft steps,
+(n_slots, γ+1) verify, whole-cache rollback with traced lengths — so
+speculation adds a constant number of XLA traces (draft decode, verify,
+rollback, plus the draft's bucketed prefill) independent of how many
+windows run.  DESIGN.md §8 records the invariants.
+
+Only families whose caches are position-indexed and fill-masked can roll
+back a rejected window; `validate_spec_support` gates the rest out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.models import api as model_api
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculation knobs: window length and the draft's code bit-width
+    (the latter consumed by the quantization side — see
+    `launch.quantize.claq_quantize_with_draft` / `core.draft_config`)."""
+    gamma: int = 4
+    draft_bits: int = 2
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
+        if self.draft_bits < 1:
+            raise ValueError(
+                f"draft_bits must be >= 1, got {self.draft_bits}")
+
+
+def validate_spec_support(cfg) -> None:
+    """Reject configs that cannot serve as a speculation target.
+
+    Delegates to the models layer's ``validate_span_support`` — the
+    single source of truth shared with the `decode_span` primitive, so
+    the engine gate and the model capability can never drift.  The gated
+    properties mirror the bucketing family gates (DESIGN.md §5): the
+    same cache structure that makes right-padding safe (position-indexed
+    storage, fill-counter masking) is what makes a rejected speculation
+    window reversible.
+    """
+    model_api.validate_span_support(cfg)
+
+
+def accept_greedy(draft: Sequence[int],
+                  target: Sequence[int]) -> Tuple[int, List[int]]:
+    """Greedy acceptance for one slot.
+
+    ``draft``: the γ proposed tokens d_1..d_γ.  ``target``: the γ+1
+    target-greedy tokens from the verify logits (g_i = argmax after the
+    history ending in d_i; g_0 after last_token).  Returns
+    ``(n_accepted, emitted)`` where emitted = the accepted prefix plus the
+    target's correction/bonus token — each emitted token is exactly what
+    vanilla greedy decode would have produced (lossless)."""
+    gamma = len(draft)
+    if len(target) != gamma + 1:
+        raise ValueError(
+            f"verify returned {len(target)} tokens for gamma={gamma}")
+    k = 0
+    while k < gamma and int(draft[k]) == int(target[k]):
+        k += 1
+    return k, [int(t) for t in draft[:k]] + [int(target[k])]

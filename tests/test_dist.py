@@ -34,6 +34,65 @@ def test_hlo_analyzer_nested_loops():
     assert res["flops"] == 20 * 2 * 32 ** 3
 
 
+def test_hlo_analyzer_fused_elementwise_cost():
+    """Elementwise ops are charged result_elems x op-weight — including
+    inside fusion bodies and multiplied by loop trip counts — under the
+    separate `elementwise_flops` key (dot FLOPs stay contraction-only)."""
+    def g(x):
+        def inner(c, _):
+            # one add (weight 1) + one exp (weight 8) per iteration,
+            # each producing 32*32 elements, plus the dot
+            return jnp.exp(c + x) @ x, None
+        c, _ = jax.lax.scan(inner, x, None, length=3)
+        return c
+    compiled = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    res = analyze_hlo(compiled.as_text())
+    assert res["flops"] == 3 * 2 * 32 ** 3           # unchanged by the ew term
+    # the loop body's add+exp dominate: at least 3 * (1 + 8) * 32*32, and
+    # bounded by a small multiple of it (XLA may add a few bookkeeping
+    # elementwise ops, e.g. iota/compare on the induction variable)
+    ew = res["elementwise_flops"]
+    assert ew >= 3 * 9 * 32 * 32
+    assert ew <= 3 * 9 * 32 * 32 + 3 * 4 * 32 * 32 + 1024
+
+
+def test_hlo_analyzer_elementwise_weights_from_text():
+    """Deterministic check on hand-written HLO: weights 1 / 4 / 8 and the
+    while trip-count multiplier."""
+    txt = """
+body (p.0: (f32[8,4], s32[])) -> (f32[8,4], s32[]) {
+  p = (f32[8,4], s32[]) parameter(0)
+  t = f32[8,4] get-tuple-element(%p), index=0
+  iv = s32[] get-tuple-element(%p), index=1
+  a = f32[8,4] add(%t, %t)
+  d = f32[8,4] divide(%a, %t)
+  e = f32[8,4] exponential(%d)
+  one = s32[] constant(1)
+  ivn = s32[] add(%iv, %one)
+  ROOT r = (f32[8,4], s32[]) tuple(%e, %ivn)
+}
+cond (p.1: (f32[8,4], s32[])) -> pred[] {
+  p = (f32[8,4], s32[]) parameter(0)
+  iv = s32[] get-tuple-element(%p), index=1
+  k = s32[] constant(5)
+  ROOT lt = pred[] compare(%iv, %k), direction=LT
+}
+ENTRY main (x.0: f32[8,4]) -> f32[8,4] {
+  x = f32[8,4] parameter(0)
+  zero = s32[] constant(0)
+  init = (f32[8,4], s32[]) tuple(%x, %zero)
+  w = (f32[8,4], s32[]) while(%init), condition=%cond, body=%body
+  ROOT out = f32[8,4] get-tuple-element(%w), index=0
+}
+"""
+    res = analyze_hlo(txt)
+    # per iteration: add 32 elems, divide 4*32, exponential 8*32, and the
+    # scalar induction add (1); cond: compare (1) — all x trip count 5
+    assert res["elementwise_flops"] == 5 * (32 + 4 * 32 + 8 * 32 + 1 + 1)
+    assert res["flops"] == 0
+
+
 def test_rowsharded_quantizer_matches_single_device(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np

@@ -41,6 +41,76 @@ def test_trivial_mesh_engine_matches_no_mesh():
     assert engm.stats()["mesh"] == {"data": 1, "model": 1}
 
 
+def test_sharded_speculative_token_parity(subproc):
+    """Self-speculative decoding on a 2x4 mesh: the draft/target pair
+    (quantized from ONE calibration pass) served with propose/verify/
+    rollback windows must emit tokens bit-identical to the single-device
+    VANILLA engine — losslessness and shard-parity composed.  Spec trace
+    counters stay constant (one draft decode, one verify) and the draft's
+    prepared plans shard over "model" like the target's."""
+    subproc("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.core import APConfig, CLAQConfig, ORConfig
+from repro.data import calibration_set
+from repro.launch.quantize import claq_quantize_with_draft
+from repro.models import api
+from repro.serve import ServingEngine, SpecConfig
+from repro.kernels.plan import PreparedQuantizedTensor
+
+cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                          n_layers=2)
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=4, gptq_blocksize=32,
+                  ap=APConfig(2.2, 2, 4), orr=ORConfig(0.1))
+calib = calibration_set(vocab=cfg.vocab, n_segments=4, seq_len=32)
+(qparams, rep), (dparams, drep) = claq_quantize_with_draft(
+    params, cfg, calib, qcfg, draft_bits=2)
+assert drep.mean_effective_bits < rep.mean_effective_bits
+
+def serve(eng, prompts, max_new=6):
+    uids = eng.add_requests(prompts, max_new_tokens=max_new)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    return [fin[u].tokens for u in uids]
+
+wave1 = [[1, 2, 3], [4, 5, 6, 7, 8, 9], [10, 11, 12, 13, 14, 15, 16, 17, 18],
+         [20, 21]]
+wave2 = [[7, 7, 7, 7, 7], [9, 8, 7]]
+
+# ground truth: single-device VANILLA greedy decode
+eng0 = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                     plan_bn=32)
+t0 = serve(eng0, wave1) + serve(eng0, wave2)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for gamma in (2, 4):
+    eng = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                        plan_bn=32, mesh=mesh, draft_params=dparams,
+                        spec=SpecConfig(gamma=gamma, draft_bits=2))
+    t = serve(eng, wave1) + serve(eng, wave2)
+    assert t == t0, (gamma, t, t0)
+    st = eng.stats()
+    assert st["verify_traces"] == 1 and st["draft_decode_traces"] == 1
+    assert st["decode_traces"] == 0
+    print(f"gamma={gamma} sharded spec parity OK, acceptance "
+          f"{st['acceptance_rate']:.2f}, {st['tokens_per_step']:.2f} tok/step")
+
+# the draft's prepared units shard over model=4 like the target's
+n_sharded = 0
+def visit(leaf):
+    global n_sharded
+    if isinstance(leaf, PreparedQuantizedTensor) and leaf.shards_whole_tiles(4):
+        n_sharded += 1
+jax.tree_util.tree_map(
+    visit, eng.draft_params,
+    is_leaf=lambda l: isinstance(l, PreparedQuantizedTensor))
+assert n_sharded > 0, "no draft unit sharded -> draft replicated everywhere"
+print("draft sharded units:", n_sharded)
+""", devices=8, timeout=1200)
+
+
 def test_sharded_engine_token_parity_and_weight_residency(subproc):
     subproc("""
 import dataclasses

@@ -1,0 +1,377 @@
+"""Self-speculative decoding: losslessness, rollback, gates, retirement.
+
+The acceptance bar is the repo's parity idiom taken to the speculative
+path: greedy speculative decoding must emit token streams BIT-IDENTICAL
+to vanilla greedy decode — same tokens, same retirement points — for any
+window length γ and any draft (the draft only sets how many tokens a
+verify call retires, never what they are), on an AP+OR-quantized
+draft/target pair built from ONE calibration pass.  Trace counters prove
+speculation adds a constant number of compiles (draft decode, verify,
+rollback) independent of how many windows run.  The multi-device (2x4
+mesh) variant lives in tests/test_dist_serving.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import APConfig, CLAQConfig, ORConfig, draft_config
+from repro.data import calibration_set
+from repro.launch.quantize import claq_quantize_with_draft
+from repro.models import api
+from repro.models.layers import select_logits
+from repro.serve import ServingEngine, SpecConfig
+from repro.serve.engine import _rollback_tail
+from repro.serve.speculative import accept_greedy, validate_spec_support
+
+jax.config.update("jax_platform_name", "cpu")
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10],
+           [11, 12, 13, 14, 15, 16, 17, 18, 19]]
+
+
+@pytest.fixture(scope="module")
+def fp_model():
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def unrelated_draft(fp_model):
+    """A draft that shares NOTHING with the target (different random
+    init): acceptance collapses toward zero, which exercises the
+    rollback/correction path on nearly every window — losslessness must
+    not depend on draft quality."""
+    cfg, _ = fp_model
+    return api.init_params(jax.random.PRNGKey(99), cfg)
+
+
+@pytest.fixture(scope="module")
+def quantized_pair(fp_model):
+    """The deployment format: AP+OR target and 2-bit draft quantized from
+    the SAME fp weights and the SAME tapped Hessians (one calibration)."""
+    cfg, params = fp_model
+    qcfg = CLAQConfig(bits=2, method="kmeans", kmeans_iters=4,
+                      gptq_blocksize=32, ap=APConfig(2.2, 2, 4),
+                      orr=ORConfig(0.1))
+    calib = calibration_set(vocab=cfg.vocab, n_segments=4, seq_len=32)
+    (qparams, rep), (dparams, drep) = claq_quantize_with_draft(
+        params, cfg, calib, qcfg, draft_bits=2)
+    assert 2.0 < rep.mean_effective_bits < 2.6
+    # flat 2-bit codes + OR reservation, strictly below the target
+    assert drep.mean_effective_bits < rep.mean_effective_bits
+    assert 2.0 <= drep.mean_effective_bits < 2.3
+    return cfg, qparams, dparams
+
+
+def _serve(eng, prompts, max_new, eos_id=None):
+    uids = eng.add_requests(prompts, max_new_tokens=max_new, eos_id=eos_id)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    return [fin[u].tokens for u in uids]
+
+
+# ------------------------------------------------------------------ units
+
+def test_spec_config_validation():
+    assert SpecConfig().gamma == 4 and SpecConfig().draft_bits == 2
+    with pytest.raises(ValueError, match="gamma"):
+        SpecConfig(gamma=0)
+    with pytest.raises(ValueError, match="draft_bits"):
+        SpecConfig(gamma=2, draft_bits=0)
+
+
+def test_accept_greedy_units():
+    # full acceptance appends the bonus token
+    assert accept_greedy([5, 6, 7], [5, 6, 7, 8]) == (3, [5, 6, 7, 8])
+    # first mismatch replaces the draft token with the target's
+    assert accept_greedy([5, 9, 7], [5, 6, 7, 8]) == (1, [5, 6])
+    # zero acceptance still emits one (target) token
+    assert accept_greedy([5, 6], [4, 6, 7]) == (0, [4])
+    with pytest.raises(ValueError, match="gamma"):
+        accept_greedy([1, 2], [1, 2])
+
+
+def test_draft_config_derivation():
+    qcfg = CLAQConfig(bits=3, method="kmeans", kmeans_iters=7,
+                      gptq_blocksize=64, ap=APConfig(3.3, 3, 4),
+                      orr=ORConfig(0.1))
+    d = draft_config(qcfg, 2)
+    assert d.bits == 2 and d.ap is None
+    assert d.orr == qcfg.orr                      # outliers kept
+    assert d.kmeans_iters == 7 and d.gptq_blocksize == 64
+    with pytest.raises(ValueError, match="draft_bits"):
+        draft_config(qcfg, 0)
+
+
+def test_select_logits_span_positions():
+    logits = jnp.arange(2 * 5 * 3, dtype=jnp.float32).reshape(2, 5, 3)
+    # legacy: last position / per-row scalar
+    assert jnp.array_equal(select_logits(logits), logits[:, -1])
+    got = select_logits(logits, jnp.asarray([[1, 3], [0, 4]]))
+    assert got.shape == (2, 2, 3)
+    assert jnp.array_equal(got[0, 0], logits[0, 1])
+    assert jnp.array_equal(got[0, 1], logits[0, 3])
+    assert jnp.array_equal(got[1, 0], logits[1, 0])
+    assert jnp.array_equal(got[1, 1], logits[1, 4])
+
+
+def test_rollback_tail_masks_and_rewinds():
+    L, B, S, KH, D = 2, 3, 8, 2, 4
+    cache = api.make_cache(
+        dataclasses.replace(get_smoke_config("llama1_7b"), n_layers=L,
+                            n_kv_heads=KH, head_dim=D),
+        B, S, dtype=jnp.float32)
+    filled = jax.tree_util.tree_map(
+        lambda a: jnp.ones_like(a) if a.dtype != jnp.int32
+        else jnp.full_like(a, S), cache)
+    lens = jnp.asarray([0, 3, 8])
+    rb = _rollback_tail(filled, lens)
+    assert np.array_equal(np.asarray(rb.length),
+                          np.broadcast_to([0, 3, 8], (L, B)))
+    k = np.asarray(rb.k)
+    for b, n in enumerate([0, 3, 8]):
+        assert np.all(k[:, b, :n] == 1.0)
+        assert np.all(k[:, b, n:] == 0.0)
+
+
+# ------------------------------------------------------------- family gate
+
+def test_speculation_gated_to_rollbackable_families(fp_model):
+    cfg, params = fp_model
+    for arch, msg in (("rwkv6_7b", "recurrent state"),
+                      ("zamba2_1p2b", "recurrent state"),
+                      ("qwen3_moe_30b_a3b", "router")):
+        c = get_smoke_config(arch)
+        with pytest.raises(NotImplementedError, match=msg):
+            validate_spec_support(c)
+    # sliding-window ring caches cannot roll back either
+    with pytest.raises(NotImplementedError, match="ring"):
+        validate_spec_support(dataclasses.replace(cfg, attn_window=16))
+    # the engine applies the gate at construction
+    wcfg = dataclasses.replace(cfg, attn_window=16)
+    with pytest.raises(NotImplementedError, match="ring"):
+        ServingEngine(params, wcfg, n_slots=2, max_len=64,
+                      draft_params=params, spec=SpecConfig(gamma=2))
+    # and both spec halves must arrive together
+    with pytest.raises(ValueError, match="draft_params"):
+        ServingEngine(params, cfg, n_slots=2, max_len=64,
+                      spec=SpecConfig(gamma=2))
+    with pytest.raises(ValueError, match="spec"):
+        ServingEngine(params, cfg, n_slots=2, max_len=64,
+                      draft_params=params)
+
+
+# ----------------------------------------------------- span decode primitive
+
+def test_decode_span_bitwise_matches_successive_decodes(fp_model):
+    """The verify primitive: one span call == γ+1 successive decode steps,
+    bitwise, at PER-SLOT fill levels (staggered by bucketed admission)."""
+    cfg, params = fp_model
+    eng = ServingEngine(params, cfg, n_slots=3, max_len=32, min_bucket=4)
+    eng.add_requests([[1, 2, 3], [4, 5], [6, 7, 8, 9, 10, 11]],
+                     max_new_tokens=8)
+    cache = eng.cache
+    span = jnp.asarray(
+        np.random.default_rng(0).integers(1, cfg.vocab, size=(3, 4)),
+        jnp.int32)
+
+    c1, outs = cache, []
+    for j in range(span.shape[1]):
+        lg, c1 = api.decode_step(params, cfg, span[:, j], c1)
+        outs.append(lg)
+    ref = jnp.stack(outs, axis=1)
+    got, c2 = api.decode_span(params, cfg, span, cache)
+    assert jnp.array_equal(got, ref)
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        assert jnp.array_equal(a, b)
+
+
+def test_decode_span_rejects_unsupported_configs(fp_model):
+    """The primitive itself gates families whose span logits could not
+    equal successive decodes (not just the engine): recurrent state, the
+    moe router's span-token coupling, and ring caches (where the S>1
+    write path would clobber the populated ring)."""
+    cfg = get_smoke_config("rwkv6_7b")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    cache = api.make_cache(cfg, 2, 16, dtype=jnp.float32)
+    with pytest.raises(NotImplementedError, match="recurrent"):
+        api.decode_span(params, cfg, jnp.zeros((2, 3), jnp.int32), cache)
+    dcfg, dparams = fp_model
+    mcfg = get_smoke_config("qwen3_moe_30b_a3b")
+    with pytest.raises(NotImplementedError, match="router"):
+        api.decode_span({}, mcfg, jnp.zeros((2, 3), jnp.int32), None)
+    wcfg = dataclasses.replace(dcfg, attn_window=16)
+    with pytest.raises(NotImplementedError, match="ring"):
+        api.decode_span(dparams, wcfg, jnp.zeros((2, 3), jnp.int32), None)
+
+
+# ------------------------------------------------------------ losslessness
+
+@pytest.mark.parametrize("gamma", [1, 2, 4])
+def test_spec_matches_vanilla_on_quantized_pair(quantized_pair, gamma):
+    """The flagship bar: greedy speculative == vanilla greedy,
+    bit-identical, on the AP+OR target with its 2-bit one-pass draft."""
+    cfg, qparams, dparams = quantized_pair
+    eng_v = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_v = _serve(eng_v, PROMPTS, max_new=8)
+
+    eng_s = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          draft_params=dparams,
+                          spec=SpecConfig(gamma=gamma, draft_bits=2))
+    toks_s = _serve(eng_s, PROMPTS, max_new=8)
+    assert toks_s == toks_v
+    assert all(len(t) == 8 for t in toks_s)
+
+    st = eng_s.stats()
+    # constant compile budget, independent of how many windows ran:
+    # one draft-decode trace, one verify trace, target decode jit unused
+    assert st["verify_traces"] == 1
+    assert st["draft_decode_traces"] == 1
+    assert st["decode_traces"] == 0
+    assert st["prefill_traces"] <= eng_s.bucketing.max_traces() * 2
+    assert st["draft_prefill_traces"] == st["prefill_traces"]
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert st["tokens_per_step"] >= 1.0
+    assert st["emitted_tokens"] == sum(len(t) - 1 for t in toks_s)
+
+
+def test_spec_lossless_with_unrelated_draft(fp_model, unrelated_draft):
+    """Emitted tokens never depend on the draft: an unrelated draft makes
+    nearly every window reject (correction path), yet the stream is
+    bit-identical and every window still emits >= 1 token per request."""
+    cfg, params = fp_model
+    eng_v = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_v = _serve(eng_v, PROMPTS, max_new=7)
+    eng_s = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          draft_params=unrelated_draft,
+                          spec=SpecConfig(gamma=3))
+    toks_s = _serve(eng_s, PROMPTS, max_new=7)
+    assert toks_s == toks_v
+    st = eng_s.stats()
+    assert st["acceptance_rate"] < 0.5          # the draft really is bad
+    assert st["tokens_per_step"] >= 1.0
+
+
+def test_spec_self_draft_accepts_everything(fp_model):
+    """draft == target: every draft token verifies, so every window emits
+    γ+1 tokens per active request and acceptance is exactly 1.0 — the
+    sharpest check that propose/verify/rollback bookkeeping agrees."""
+    cfg, params = fp_model
+    gamma = 2
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=64, min_bucket=8,
+                        draft_params=params, spec=SpecConfig(gamma=gamma))
+    # max_new = 1 (admission) + 2 full windows of gamma+1
+    (toks,) = _serve(eng, [[1, 2, 3]], max_new=1 + 2 * (gamma + 1))
+    st = eng.stats()
+    assert st["acceptance_rate"] == 1.0
+    assert st["engine_steps"] == 2
+    assert st["tokens_per_step"] == gamma + 1
+
+
+def test_spec_mla_matches_vanilla(fp_model):
+    """MLA's absorbed decode has its own span generalization — parity on
+    a dense+MLA config (latent cache rollback via c_kv/k_pe leaves)."""
+    cfg, _ = fp_model
+    mcfg = dataclasses.replace(cfg, use_mla=True, q_lora=32, kv_lora=16,
+                               rope_head_dim=8, v_head_dim=16, head_dim=16)
+    params = api.init_params(jax.random.PRNGKey(3), mcfg)
+    draft = api.init_params(jax.random.PRNGKey(7), mcfg)
+    eng_v = ServingEngine(params, mcfg, n_slots=3, max_len=64, min_bucket=8)
+    toks_v = _serve(eng_v, PROMPTS[:3], max_new=6)
+    eng_s = ServingEngine(params, mcfg, n_slots=3, max_len=64, min_bucket=8,
+                          draft_params=draft, spec=SpecConfig(gamma=2))
+    toks_s = _serve(eng_s, PROMPTS[:3], max_new=6)
+    assert toks_s == toks_v
+
+
+# ------------------------------------------------- retirement inside windows
+
+def test_eos_mid_window_retires_at_exact_token(fp_model, unrelated_draft):
+    """EOS appearing anywhere inside a speculation window must retire the
+    request at exactly that token — accepted tokens PAST the EOS are
+    discarded with the rollback, never emitted."""
+    cfg, params = fp_model
+    base = _serve(ServingEngine(params, cfg, n_slots=4, max_len=64,
+                                min_bucket=8), PROMPTS, max_new=8)
+    eos = base[1][3]       # a token mid-stream of request 1
+    eng_v = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_v = _serve(eng_v, PROMPTS, max_new=8, eos_id=eos)
+    eng_s = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          draft_params=unrelated_draft,
+                          spec=SpecConfig(gamma=4))
+    toks_s = _serve(eng_s, PROMPTS, max_new=8, eos_id=eos)
+    assert toks_s == toks_v
+    # retired BY the eos (if the value happened to appear even earlier in
+    # the stream, both engines cut there — parity already asserted)
+    assert toks_s[1][-1] == eos and len(toks_s[1]) <= 4
+    assert eos not in toks_s[1][:-1]
+
+
+def test_budget_exhausted_mid_window(fp_model, unrelated_draft):
+    """max_new_tokens that is NOT window-aligned (budget runs out in the
+    middle of a verify window) must truncate at exactly the budget."""
+    cfg, params = fp_model
+    for max_new in (2, 4, 5):
+        eng_v = ServingEngine(params, cfg, n_slots=4, max_len=64,
+                              min_bucket=8)
+        toks_v = _serve(eng_v, PROMPTS, max_new=max_new)
+        eng_s = ServingEngine(params, cfg, n_slots=4, max_len=64,
+                              min_bucket=8, draft_params=unrelated_draft,
+                              spec=SpecConfig(gamma=3))
+        toks_s = _serve(eng_s, PROMPTS, max_new=max_new)
+        assert toks_s == toks_v
+        assert all(len(t) == max_new for t in toks_s)
+
+
+def test_cache_full_truncates_mid_window(fp_model, unrelated_draft):
+    """A budget mutated past the slot cache (streaming extension) retires
+    `truncated` at exactly the same token count as the vanilla engine —
+    the span's out-of-bounds K/V writes are dropped, never clamped onto
+    the last real position."""
+    cfg, params = fp_model
+    counts = []
+    for spec, draft in ((None, None),
+                        (SpecConfig(gamma=4), unrelated_draft)):
+        eng = ServingEngine(params, cfg, n_slots=2, max_len=16,
+                            draft_params=draft, spec=spec)
+        uid = eng.add_request(list(range(1, 9)), max_new_tokens=8)
+        eng.active[uid].max_new_tokens = 100
+        eng.run_to_completion()
+        req = eng.take_finished()[uid]
+        assert req.done and req.truncated
+        counts.append(req.tokens)
+    assert counts[0] == counts[1]
+    assert len(counts[0]) == 16 - 8 + 1
+
+
+def test_slot_reuse_and_constant_traces_across_waves(fp_model,
+                                                     unrelated_draft):
+    """Waves of admissions through 2 slots: speculation's compile count
+    stays at one draft-decode + one verify trace no matter how many
+    windows run, and prefill traces stay inside the bucket bound."""
+    cfg, params = fp_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=64, min_bucket=8,
+                        draft_params=unrelated_draft,
+                        spec=SpecConfig(gamma=2))
+    pending = [[i + 1, i + 2, i + 3] for i in range(6)]
+    admitted = []
+    while pending or eng.active:
+        if pending and eng.free:
+            batch = [pending.pop(0)
+                     for _ in range(min(len(pending), len(eng.free)))]
+            admitted += eng.add_requests(batch, max_new_tokens=5)
+        eng.step()
+    fin = eng.take_finished()
+    assert sorted(fin) == sorted(admitted) and len(fin) == 6
+    assert all(r.done and len(r.tokens) == 5 for r in fin.values())
+    st = eng.stats()
+    assert st["verify_traces"] == 1
+    assert st["draft_decode_traces"] == 1
+    assert st["engine_steps"] > 2               # several windows really ran
