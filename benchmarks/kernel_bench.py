@@ -6,11 +6,29 @@ kernel path vs the dense-bf16 path (the memory-bound decode speedup the
 deployment format buys), kernel-launch counts for the ahead-of-time plan
 path vs the per-stripe path, and interpret-mode correctness timing.
 
-`kernel_bench()` also writes BENCH_kernel.json at the repo root so the
-prepared-vs-unprepared perf trajectory is tracked across PRs.
+Rows cover decode-shaped matmuls (M=1 single-token, M=8 a decode batch)
+next to the prefill-ish M=64, and A/B the two activation-fetch paths of
+the prepared matmul: the pre-fold XLA gather (gather="xla") vs the
+in-kernel fetch (gather="kernel" — aligned block reads for integer
+bit-widths, in-kernel takes for mixed-precision plans; DESIGN.md §9).
+The opt-in int8 activation path is timed alongside with its measured
+error against the f32 reference checked under the documented bound.
+A small bk/bn sweep at 4 bits chases the near-parity prepared result
+PR 1 left on the table.
+
+`kernel_bench()` writes BENCH_kernel.json at the repo root so the
+prepared-vs-unprepared perf trajectory is tracked across PRs.  `--smoke`
+(the CI step) shrinks reps and SELF-ASSERTS the structural claims:
+prepared runs at or under the unprepared time, and the in-kernel gather
+at or under the XLA gather's time, at every bit-width (a 25% tolerance
+plus a 4x-reps re-measure absorbs shared-box noise; the interleaved
+min-of-N sampling cancels drift).
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke] [--out PATH]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -27,6 +45,9 @@ from repro.kernels.plan import prepare_for_inference
 _BENCH_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_kernel.json")
+
+# shared-box noise tolerance for the smoke-mode self-asserts
+_SMOKE_SLACK = 1.25
 
 
 def _sample(fn, *args):
@@ -49,6 +70,19 @@ def _time_pair(fn_a, fn_b, *args, reps=11):
     return float(np.min(a)), float(np.min(b))
 
 
+def _assert_not_slower(fast_fn, base_fn, x, us_fast, us_base, reps, label):
+    """Smoke-mode perf claim with one escalation: this box's wall times
+    swing ~2x under neighboring load, so a first-pass miss re-measures
+    with 4x the samples before declaring a regression."""
+    if us_fast <= us_base * _SMOKE_SLACK:
+        return us_fast, us_base
+    us_base, us_fast = _time_pair(base_fn, fast_fn, x, reps=4 * reps)
+    assert us_fast <= us_base * _SMOKE_SLACK, (
+        f"{label}: {us_fast:.0f}us vs baseline {us_base:.0f}us "
+        f"(> {_SMOKE_SLACK:.2f}x, re-measured)")
+    return us_fast, us_base
+
+
 def _quantize(W, bits):
     """One tensor per benchmarked bit-width; fractional widths get the
     paper's AP+OR fusion (multi-stripe mixed precision + outliers)."""
@@ -63,13 +97,16 @@ def _quantize(W, bits):
     return qt
 
 
-def kernel_bench(out_json: str = _BENCH_JSON):
+def kernel_bench(out_json: str = _BENCH_JSON, smoke: bool = False):
     rows = []
     results = {}
     rng = np.random.default_rng(0)
-    n, k_dim, m = 512, 512, 64
+    n, k_dim = 512, 512
+    reps = 9 if smoke else 17
+    ms = (1, 8) if smoke else (1, 8, 64)
     W = jnp.asarray(rng.normal(size=(n, k_dim)).astype(np.float32))
-    x = jnp.asarray(rng.normal(size=(m, k_dim)).astype(np.float32))
+    xs = {m: jnp.asarray(rng.normal(size=(m, k_dim)).astype(np.float32))
+          for m in ms}
 
     for bits in (2, 2.5, 3, 4):
         qt = _quantize(W, bits)
@@ -81,56 +118,140 @@ def kernel_bench(out_json: str = _BENCH_JSON):
                       for s in qt.stripes)
         ratio = dense_bytes / q_bytes
 
-        # XLA (dry-run lowering) path, jitted steady state
-        us_xla_unprep, us_xla_prep = _time_pair(
-            jax.jit(lambda a, q=qt: ops.qmatmul(a, q)),
-            jax.jit(lambda a, q=pqt: ops.qmatmul(a, q)), x)
-
-        # Pallas interpret path (eager dispatch, counts real launches)
         def run_unprep(a, q=qt):
             return ops.qmatmul(a, q, use_kernel=True, interpret=True)
 
-        def run_prep(a, q=pqt):
-            return ops.qmatmul(a, q, use_kernel=True, interpret=True)
+        def run_xla_gather(a, q=pqt):
+            return ops.prepared_qmatmul(a, q, gather="xla")
 
+        def run_kernel_gather(a, q=pqt):
+            return ops.prepared_qmatmul(a, q, gather="kernel")
+
+        def run_int8(a, q=pqt):
+            return ops.prepared_qmatmul(a, q, gather="kernel",
+                                        act_dtype="int8")
+
+        x_big = xs[max(ms)]
         c0 = dm.launch_count
-        run_unprep(x)
+        run_unprep(x_big)
         launches_unprep = dm.launch_count - c0
         c0 = dm.launch_count
-        run_prep(x)
+        run_kernel_gather(x_big)
         launches_prep = dm.launch_count - c0
 
-        us_ker_unprep, us_ker_prep = _time_pair(run_unprep, run_prep, x)
-
-        err = float(jnp.max(jnp.abs(run_prep(x) - ref_lib.ref_qmatmul(x, qt))))
+        # prepared-vs-unprepared continuity row (PR 1's fusion claim) at
+        # the largest M, on the in-kernel-gather path serving now
+        us_unprep, us_prep = _time_pair(run_unprep, run_kernel_gather,
+                                        x_big, reps=reps)
+        err = float(jnp.max(jnp.abs(run_kernel_gather(x_big)
+                                    - ref_lib.ref_qmatmul(x_big, qt))))
+        if smoke:
+            us_prep, us_unprep = _assert_not_slower(
+                run_kernel_gather, run_unprep, x_big, us_prep, us_unprep,
+                reps, f"{bits}-bit prepared-vs-unprepared")
 
         key = str(bits)
         results[key] = {
             "stripes": [(s.bits, s.n_cols) for s in qt.stripes],
             "distinct_bitwidths": len({s.bits for s in qt.stripes}),
+            "x_gather_free": pqt.x_gather_free,
             "launches_unprepared": launches_unprep,
             "launches_prepared": launches_prep,
-            "xla_us_unprepared": us_xla_unprep,
-            "xla_us_prepared": us_xla_prep,
-            "interp_us_unprepared": us_ker_unprep,
-            "interp_us_prepared": us_ker_prep,
+            "interp_us_unprepared": us_unprep,
+            "interp_us_prepared": us_prep,
             "weight_bytes_ratio_vs_bf16": ratio,
             "prepared_max_err_vs_ref": err,
         }
-        rows.append((f"kernel/dequant_matmul_{key}bit_xla_unprepared",
-                     us_xla_unprep, f"weight_bytes_ratio={ratio:.2f}"))
-        rows.append((f"kernel/dequant_matmul_{key}bit_xla_prepared",
-                     us_xla_prep,
-                     f"speedup={us_xla_unprep / max(us_xla_prep, 1e-9):.2f}x"))
         rows.append((f"kernel/dequant_matmul_{key}bit_interp_unprepared",
-                     us_ker_unprep, f"launches={launches_unprep}"))
+                     us_unprep, f"weight_bytes_ratio={ratio:.2f};"
+                     f"launches={launches_unprep}"))
         rows.append((f"kernel/dequant_matmul_{key}bit_interp_prepared",
-                     us_ker_prep,
-                     f"launches={launches_prep};max_err={err:.2e}"))
+                     us_prep, f"launches={launches_prep};max_err={err:.2e}"))
+
+        # decode-shaped rows: in-kernel gather vs XLA gather, + int8
+        Wd = qt.dequantize()
+        for m in ms:
+            x = xs[m]
+            # recorded figures sample at 4x the smoke budget, in TWO
+            # temporally separated passes min-combined — unconditional, so
+            # no result-conditioned re-roll can bias the published A/B
+            # (smoke keeps the small budget; its asserts escalate
+            # themselves on a miss)
+            us_xla, us_ker = _time_pair(run_xla_gather, run_kernel_gather,
+                                        x, reps=reps if smoke else 4 * reps)
+            if smoke:
+                us_i8 = min(_sample(run_int8, x) for _ in range(reps))
+            else:
+                a2, k2 = _time_pair(run_xla_gather, run_kernel_gather,
+                                    x, reps=4 * reps)
+                us_xla, us_ker = min(us_xla, a2), min(us_ker, k2)
+                # int8 rides the same protocol: interleaved against the
+                # kernel-gather baseline (drift-cancelled), two separated
+                # passes min-combined; the companion sample is discarded
+                # so the published A/B pair stays symmetric
+                _, i1 = _time_pair(run_kernel_gather, run_int8, x,
+                                   reps=2 * reps)
+                _, i2 = _time_pair(run_kernel_gather, run_int8, x,
+                                   reps=2 * reps)
+                us_i8 = min(i1, i2)
+            assert np.array_equal(np.asarray(run_kernel_gather(x)),
+                                  np.asarray(run_xla_gather(x))), \
+                f"{bits}-bit m={m}: gather paths diverged (must be bitwise)"
+            y_ref = ref_lib.ref_qmatmul(x, qt)
+            err_el = jnp.abs(run_int8(x) - y_ref)
+            bound_el = ref_lib.ref_act_int8_bound(x, Wd)
+            # per-ELEMENT check (the documented guarantee is per output
+            # element; a global max-vs-max compare would let one token's
+            # violation hide under another token's larger bound)
+            assert bool(jnp.all(err_el <= bound_el * 1.01 + 1e-5)), \
+                (bits, m, float(jnp.max(err_el - bound_el)))
+            i8_err = float(jnp.max(err_el))
+            i8_bound = float(jnp.max(bound_el))
+            if smoke:
+                us_ker, us_xla = _assert_not_slower(
+                    run_kernel_gather, run_xla_gather, x, us_ker, us_xla,
+                    reps, f"{bits}-bit m={m} in-kernel-vs-XLA gather")
+            results[key][f"m{m}"] = {
+                "interp_us_xla_gather": us_xla,
+                "interp_us_kernel_gather": us_ker,
+                "interp_us_int8": us_i8,
+                "int8_max_err": i8_err,
+                "int8_err_bound": i8_bound,
+            }
+            rows.append((f"kernel/dequant_matmul_{key}bit_m{m}_xla_gather",
+                         us_xla, "prefold_take"))
+            rows.append((f"kernel/dequant_matmul_{key}bit_m{m}_kernel_gather",
+                         us_ker,
+                         f"speedup={us_xla / max(us_ker, 1e-9):.2f}x;"
+                         f"gather_free={pqt.x_gather_free}"))
+            rows.append((f"kernel/dequant_matmul_{key}bit_m{m}_act_int8",
+                         us_i8, f"max_err={i8_err:.2e};bound={i8_bound:.2e}"))
+
+    # bk/bn sweep at 4 bits, decode batch shape (the near-parity cell PR 1
+    # left: plan tiles were never tuned below the defaults)
+    if not smoke:
+        qt4 = _quantize(W, 4)
+        x8 = xs[8]
+        sweep = {}
+        for bk, bn in ((128, 128), (256, 128), (512, 128), (512, 256),
+                       (512, 512)):
+            p = prepare_for_inference(qt4, bn=bn, bk=bk)
+
+            def run(a, q=p):
+                return ops.prepared_qmatmul(a, q, gather="kernel")
+
+            run(x8)
+            us = min(_sample(run, x8) for _ in range(reps))
+            sweep[f"bk{bk}_bn{bn}"] = us
+            rows.append((f"kernel/sweep_4bit_m8_bk{bk}_bn{bn}", us, ""))
+        best = min(sweep, key=sweep.get)
+        results["sweep_4bit_m8"] = {**sweep, "best": best}
+        rows.append((f"kernel/sweep_4bit_m8_best", sweep[best], best))
 
     with open(out_json, "w") as f:
         json.dump(results, f, indent=1, sort_keys=True)
-    rows.append((f"kernel/bench_json_written", 0.0, out_json))
+        f.write("\n")
+    rows.append(("kernel/bench_json_written", 0.0, out_json))
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -157,3 +278,19 @@ def roofline_rows(dryrun_path="experiments/dryrun.json"):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer reps, decode shapes only, and "
+                         "self-assert that prepared runs no slower than "
+                         "unprepared and the in-kernel gather no slower "
+                         "than the XLA gather, at every bit-width")
+    ap.add_argument("--out", default=_BENCH_JSON)
+    args = ap.parse_args()
+    kernel_bench(out_json=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -76,10 +76,10 @@ def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False):
     prompts = [rng.integers(1, cfg.vocab, size=rng.integers(3, 14)).tolist()
                for _ in range(n_req)]
 
-    def make(spec=None):
+    def make(spec=None, **kw):
         return ServingEngine(
             qparams, cfg, n_slots=n_req, max_len=64, min_bucket=8,
-            draft_params=dparams if spec else None, spec=spec)
+            draft_params=dparams if spec else None, spec=spec, **kw)
 
     rows = []
     results = {
@@ -125,6 +125,28 @@ def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False):
                      f"steps={steps};"
                      f"tokens_per_step={total / steps:.2f};"
                      f"acceptance={st['acceptance_rate']:.2f}"))
+
+    # draft-specific plan tiles (ROADMAP spec item b): the 2-bit draft's
+    # groups are skinnier than the target's, so its plans get their own
+    # bn cap — losslessness is tile-independent, so parity still ASSERTS,
+    # and the recorded delta is pure plan-tile effect on the draft chain
+    gamma = GAMMAS[0]
+    eng = make(SpecConfig(gamma=gamma, draft_bits=2), draft_plan_bn=32)
+    toks, steps, secs = _run(eng, prompts, max_new)
+    assert toks == base_tokens, (
+        f"draft_plan_bn=32 gamma={gamma} diverged from vanilla greedy")
+    st = eng.stats()
+    total = sum(len(t) for t in toks)
+    results[f"spec_gamma{gamma}_draft_bn32"] = {
+        "tokens": total, "steps": steps,
+        "tokens_per_step": total / steps,
+        "ms_per_step": secs / steps * 1e3,
+        "acceptance_rate": st["acceptance_rate"],
+    }
+    rows.append((f"serve/decode_spec_gamma{gamma}_draft_bn32",
+                 secs / steps * 1e6,
+                 f"steps={steps};tokens_per_step={total / steps:.2f};"
+                 f"acceptance={st['acceptance_rate']:.2f}"))
 
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -36,7 +36,9 @@ class QuantStripe:
 
     @property
     def n_cols(self) -> int:
-        return self.packed.shape[1]
+        # last axis: holds for per-matrix (packed_rows, n_cols) leaves AND
+        # layer-stacked (L, ..., packed_rows, n_cols) leaves alike
+        return self.packed.shape[-1]
 
 
 jax.tree_util.register_dataclass(

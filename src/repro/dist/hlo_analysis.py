@@ -254,6 +254,31 @@ def collective_instructions(text: str):
     return out
 
 
+def gather_instructions(text: str):
+    """Every gather / dynamic-slice instruction in the module (all
+    computations, fusion and loop bodies included, each listed ONCE) as
+    ``[(kind, result_bytes), ...]`` — the indexed-load counterpart of
+    `collective_instructions`.
+
+    Tests use this to pin down the decode hot path's indexing cost: the
+    fused CLAQ matmul must add ZERO gather instructions over a dense
+    model's decode step when its plans are x-aligned (the plan folded the
+    stripe permutation away entirely, DESIGN.md §9), and for permuted
+    (mixed-precision) plans every added gather must be a VMEM-tile-sized
+    in-kernel take — never an activation-sized XLA gather.  `dynamic-slice`
+    is reported too (cache reads, in-kernel block fetches) so callers can
+    distinguish block fetches from true gathers; note ``all-gather`` is a
+    collective, not counted here."""
+    out = []
+    for comp, instrs in _parse_computations(text).items():
+        if comp == "__entry__":
+            continue
+        for ins in instrs:
+            if ins.op in ("gather", "dynamic-slice"):
+                out.append((ins.op, _result_bytes(ins.line)))
+    return out
+
+
 def analyze_hlo(text: str) -> Dict[str, float]:
     comps = _parse_computations(text)
     entry = comps.get("__entry__", [])

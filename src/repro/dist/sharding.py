@@ -64,7 +64,7 @@ def _quantized_types():
 # per-leaf rule must never invent a spec for these (see spec_for_quantized)
 _QUANT_LEAF_MARKERS = (".groups[", ".planes[", ".gather_idx", ".codebook",
                       ".out_idx", ".out_val", ".stripes[", ".col_perm",
-                      ".out_count", ".packed")
+                      ".out_count", ".packed", ".x_idx")
 
 
 def spec_for_quantized(q, ax: MeshAxes):
@@ -76,8 +76,9 @@ def spec_for_quantized(q, ax: MeshAxes):
         multiple of the 32-row word, so a bn-aligned split is word-aligned
         and every shard keeps whole (bn, bk) tiles);
       * `codebook` / `out_idx` / `out_val` are K-indexed (and outlier idx
-        *values* are global row numbers), `gather_idx` indexes the
-        activation's K axis — all replicated;
+        *values* are global row numbers), `gather_idx` / the per-group
+        `x_idx` block tables index the activation's K axis — all
+        replicated;
       * guarded by `shards_whole_tiles(model_size)`: when the tile count
         does not divide, the WHOLE unit stays replicated — never torn;
       * stacked (L, ...) / (L, E, ...) leaves (launch.quantize stacks

@@ -18,6 +18,32 @@ TPU adaptation (DESIGN.md §4):
 
 Grid: (M/bm, N/bn, K/bk), K innermost; the (bm, bn) f32 output block stays
 resident in VMEM across the K sweep (revisited accumulation).
+
+Activation fetch (`x_mode`, DESIGN.md §9) — how each (bm, bk) x tile
+reaches the MXU:
+  * "blocked": x arrives pre-gathered and K-padded by the caller (the
+    legacy XLA-gather path and the per-stripe unprepared dispatch); the
+    tile is a plain (i, k) block.
+  * "aligned": x is the RAW activation matrix; the plan proved the group's
+    fused K order IS original column order (single-bit-width tensors —
+    `build_quantized_tensor` emits an identity permutation), so the tile
+    is the raw (i, x_base + k) block, and only the padded K tail past
+    `k_cols` is masked to zero in-kernel (the tail's codebooks/outliers
+    are zero/-1, but interpret-mode Pallas pads out-of-bounds blocks with
+    NaN, and NaN * 0 would poison the accumulator).
+  * "gathered": x is the raw matrix, VMEM-resident as one (bm, K) block
+    pinned at (i, 0) across the whole (N, K) sweep, plus a per-bk-block
+    int32 index table (the plan's `gather_idx` reshaped); the kernel takes
+    the tile's columns out of the resident block (on TPU a VMEM-local
+    dynamic gather along lanes; never an HBM gather) and masks index
+    `cols` (the fill slot) to 0.0 — bitwise the same tile the XLA
+    `jnp.take(..., mode="fill")` used to build.
+
+Per-token int8 activations ride any mode: x may be int8 (cast to the
+compute dtype after the fetch) with an optional (M, 1) f32 `x_scale`
+operand folded into the output block at the LAST K step — one multiply
+per output element after the integer-valued accumulation, so the MXU
+consumes unscaled int8-exact values.
 """
 from __future__ import annotations
 
@@ -64,13 +90,18 @@ def _dequant_tile(codes, cb, n_levels: int, compute_dtype):
 
 
 def _kernel(x_ref, *rest, bits: int, plane_widths: Sequence[int], bn: int,
-            k_out: int, n_levels: int, has_acc: bool, compute_dtype):
+            bk: int, k_out: int, n_levels: int, has_acc: bool, compute_dtype,
+            x_mode: str, k_cols: int, has_scale: bool):
     nplanes = len(plane_widths)
+    if x_mode == "gathered":
+        xi_ref, rest = rest[0], rest[1:]
     plane_refs = rest[:nplanes]
     rest = rest[nplanes:]
     cb_ref, rest = rest[0], rest[1:]
     if k_out > 0:
         idx_ref, val_ref, rest = rest[0], rest[1], rest[2:]
+    if has_scale:
+        scale_ref, rest = rest[0], rest[1:]
     if has_acc:
         acc_ref, rest = rest[0], rest[1:]
     (o_ref,) = rest
@@ -82,6 +113,24 @@ def _kernel(x_ref, *rest, bits: int, plane_widths: Sequence[int], bn: int,
         # seed the VMEM-resident output block: zeros, or the running
         # accumulator when fusing multiple bit-width groups into one output
         o_ref[...] = acc_ref[...] if has_acc else jnp.zeros_like(o_ref)
+
+    # --- fetch the (bm, bk) x tile (see module docstring: x_mode) -----------
+    if x_mode == "blocked":
+        xt = x_ref[...]
+    elif x_mode == "aligned":
+        xt = x_ref[...]
+        if k_cols % bk != 0:
+            # the group's padded K tail: weights there are zero, but the
+            # raw-x block read past `cols` is NaN-padded in interpret mode
+            fused = k_step * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (1, bk), 1)
+            xt = jnp.where(fused < k_cols, xt, jnp.zeros((), xt.dtype))
+    else:                              # "gathered": in-kernel take over the
+        xf = x_ref[...]                # VMEM-resident raw (bm, K) block
+        x_cols = xf.shape[1]
+        ii = xi_ref[0, :]              # (bk,) original col per fused K slot
+        xt = jnp.take(xf, jnp.minimum(ii, x_cols - 1), axis=1)
+        xt = jnp.where((ii < x_cols)[None, :], xt, jnp.zeros((), xt.dtype))
 
     # --- unpack code planes -> (bn, bk) int32 codes -------------------------
     codes = None
@@ -104,9 +153,18 @@ def _kernel(x_ref, *rest, bits: int, plane_widths: Sequence[int], bn: int,
             wt = jnp.where(hit, val[r][None, :].astype(compute_dtype), wt)
 
     # --- MXU ------------------------------------------------------------------
-    x = x_ref[...].astype(compute_dtype)
+    x = xt.astype(compute_dtype)
     o_ref[...] += jax.lax.dot_general(
         x, wt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    if has_scale:
+        # per-token (row) activation scale, folded in ONCE after the full
+        # K sweep — the last launch of a multi-group matmul carries it, so
+        # the whole accumulated sum (acc seed included) is scaled exactly
+        # once: y = scale_m * sum_k xq[m,k] * w[n,k]
+        @pl.when(k_step == pl.num_programs(2) - 1)
+        def _fold_scale():
+            o_ref[...] = o_ref[...] * scale_ref[...].astype(jnp.float32)
 
 
 # pallas_call dispatches issued from python since process start (trace-time
@@ -117,24 +175,45 @@ launch_count = 0
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "n", "bm", "bn", "bk", "interpret", "compute_dtype"),
+    static_argnames=("bits", "n", "bm", "bn", "bk", "interpret",
+                     "compute_dtype", "x_mode", "x_base", "k_cols"),
 )
-def _dequant_matmul(x, planes, codebook, out_idx, out_val, acc, *,
-                    bits, n, bm, bn, bk, interpret, compute_dtype):
+def _dequant_matmul(x, planes, codebook, out_idx, out_val, acc, x_idx,
+                    x_scale, *, bits, n, bm, bn, bk, interpret,
+                    compute_dtype, x_mode, x_base, k_cols):
     from repro.core import packing
 
     widths = packing.plane_widths(bits)
-    m, k_dim = x.shape
-    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0
+    m = x.shape[0]
+    k_padded = planes[0].shape[-1]     # fused, block-padded K of the group
+    assert m % bm == 0 and n % bn == 0 and k_padded % bk == 0
     for w, p in zip(widths, planes):
-        assert p.shape == (n // (32 // w), k_dim), (p.shape, n, k_dim, w)
-    grid = (m // bm, n // bn, k_dim // bk)
+        assert p.shape == (n // (32 // w), k_padded), (p.shape, n, k_padded, w)
+    grid = (m // bm, n // bn, k_padded // bk)
     n_levels = 2 ** bits
 
     k_out = 0 if out_idx is None else out_idx.shape[0]
 
-    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    if x_mode == "blocked":
+        assert x.shape[1] == k_padded, (x.shape, k_padded)
+        in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    elif x_mode == "aligned":
+        # raw x; the group's fused K order IS original columns starting at
+        # block offset x_base — a plain shifted block fetch, no indexing
+        in_specs = [pl.BlockSpec((bm, bk),
+                                 lambda i, j, k, xb=x_base: (i, xb + k))]
+    elif x_mode == "gathered":
+        # raw x, whole K axis resident per M block (index map constant in
+        # j/k — Pallas keeps the block in VMEM across the (N, K) sweep)
+        in_specs = [pl.BlockSpec((bm, x.shape[1]), lambda i, j, k: (i, 0))]
+    else:
+        raise ValueError(f"unknown x_mode {x_mode!r}")
     operands = [x]
+    if x_mode == "gathered":
+        assert x_idx is not None and x_idx.shape == (k_padded // bk, bk), \
+            (None if x_idx is None else x_idx.shape, k_padded, bk)
+        in_specs.append(pl.BlockSpec((1, bk), lambda i, j, k: (k, 0)))
+        operands.append(x_idx)
     for w, p in zip(widths, planes):
         cpw = 32 // w
         in_specs.append(pl.BlockSpec((bn // cpw, bk), lambda i, j, k: (j, k)))
@@ -145,15 +224,20 @@ def _dequant_matmul(x, planes, codebook, out_idx, out_val, acc, *,
         in_specs.append(pl.BlockSpec((k_out, bk), lambda i, j, k: (0, k)))
         in_specs.append(pl.BlockSpec((k_out, bk), lambda i, j, k: (0, k)))
         operands.extend([out_idx, out_val])
+    if x_scale is not None:
+        assert x_scale.shape == (m, 1), (x_scale.shape, m)
+        in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)))
+        operands.append(x_scale)
     if acc is not None:
         assert acc.shape == (m, n), (acc.shape, m, n)
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
         operands.append(acc)
 
     kernel = functools.partial(
-        _kernel, bits=bits, plane_widths=widths, bn=bn, k_out=k_out,
+        _kernel, bits=bits, plane_widths=widths, bn=bn, bk=bk, k_out=k_out,
         n_levels=n_levels, has_acc=acc is not None,
-        compute_dtype=compute_dtype)
+        compute_dtype=compute_dtype, x_mode=x_mode, k_cols=k_cols,
+        has_scale=x_scale is not None)
 
     return pl.pallas_call(
         kernel,
@@ -168,7 +252,7 @@ def _dequant_matmul(x, planes, codebook, out_idx, out_val, acc, *,
 
 
 def dequant_matmul(
-    x: Array,                     # (M, K)
+    x: Array,                     # (M, K) — fused-padded ("blocked") or raw
     planes: tuple,                # per-plane (n_words, K) uint32
     codebook: Array,              # (K, 2**bits)
     out_idx: Optional[Array],     # (k_out, K) int32 global row ids, -1 pad
@@ -182,14 +266,25 @@ def dequant_matmul(
     interpret: bool = False,
     compute_dtype=jnp.float32,
     acc: Optional[Array] = None,  # (M, N) f32 running accumulator to fold in
+    x_mode: str = "blocked",      # "blocked" | "aligned" | "gathered"
+    x_base: int = 0,              # aligned: x block offset (x_start // bk)
+    k_cols: int = 0,              # aligned: unpadded fused K (tail mask)
+    x_idx: Optional[Array] = None,    # gathered: (K/bk, bk) int32 tables
+    x_scale: Optional[Array] = None,  # (M, 1) f32 per-token act scale
 ) -> Array:
-    """y = [acc +] x @ W^T for one uniform-bit-width CLAQ group.  Shapes
-    must be padded to block multiples by the caller (kernels/ops.py /
-    kernels/plan.py do this).  `acc` seeds the output block at the first K
+    """y = [acc +] x @ W^T for one uniform-bit-width CLAQ group.  Plane /
+    codebook / outlier shapes must be padded to block multiples by the
+    caller (kernels/ops.py / kernels/plan.py do this); with the raw-x
+    modes ("aligned" / "gathered", module docstring) x itself needs only
+    its rows padded to bm.  `acc` seeds the output block at the first K
     step, so multi-group (mixed-precision) matmuls accumulate inside the
-    kernel instead of through an XLA add per group."""
+    kernel instead of through an XLA add per group; `x_scale` folds a
+    per-token int8 activation scale into the output at the last K step
+    (pass it on the LAST launch of a multi-group chain only)."""
     global launch_count
     launch_count += 1
     return _dequant_matmul(x, tuple(planes), codebook, out_idx, out_val, acc,
+                           x_idx, x_scale,
                            bits=bits, n=n, bm=bm, bn=bn, bk=bk,
-                           interpret=interpret, compute_dtype=compute_dtype)
+                           interpret=interpret, compute_dtype=compute_dtype,
+                           x_mode=x_mode, x_base=x_base, k_cols=k_cols)

@@ -82,6 +82,32 @@ def _round_up(v: int, mult: int) -> int:
     return ((v + mult - 1) // mult) * mult
 
 
+def quantize_activations(x: Array):
+    """Per-token (row) dynamic absmax int8 quantization of activations:
+    x (..., K) f32 -> (xq (..., K) int8, scale (..., 1) f32) with
+    x ≈ xq * scale.  |x/scale| <= 127 exactly at the row max, so round
+    never clips; all-zero rows get scale 1 (0/0 would mint NaNs).  The
+    quantization error per element is <= scale/2 (round-to-nearest), which
+    bounds the matmul error at scale_m/2 * ||W_n||_1 per output element
+    (kernels/ref.ref_act_int8_bound, DESIGN.md §9)."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0).astype(jnp.float32)
+    xq = jnp.round(x.astype(jnp.float32) / scale).astype(jnp.int8)
+    return xq, scale
+
+
+def normalize_act_dtype(act_dtype):
+    """None/'f32' -> None (full precision); 'int8' passes through;
+    anything else raises.  The single validation point for the activation
+    quantization knob — the ServingEngine calls it too."""
+    if act_dtype in (None, "f32"):
+        return None
+    if act_dtype != "int8":
+        raise ValueError(f"unsupported act_dtype {act_dtype!r} "
+                         "(expected 'f32' or 'int8')")
+    return act_dtype
+
+
 def prepared_qmatmul(
     x: Array,
     pqt: PreparedQuantizedTensor,
@@ -89,42 +115,91 @@ def prepared_qmatmul(
     interpret: bool = True,
     bm: int = dm.DEFAULT_BM,
     compute_dtype=jnp.float32,
+    gather: str = "kernel",
+    act_dtype=None,
 ) -> Array:
     """Fused hot path: x (..., K) @ dequantize(pqt)^T -> (..., N).
 
-    The plan did all per-tensor work offline, so this is: one gather (the
-    folded stripe permutation + padding), one pad of x rows to the M block,
-    then exactly ONE `pallas_call` per distinct stripe bit-width, each
-    accumulating into the same output block via the kernel's acc operand.
+    The plan did all per-tensor work offline, so this is exactly ONE
+    `pallas_call` per distinct stripe bit-width, each accumulating into
+    the same output block via the kernel's acc operand.
+
+    gather="kernel" (default): the kernel consumes RAW x — aligned groups
+    read plain (i, k) blocks, permuted groups take their columns from a
+    VMEM-resident x block via the plan's per-bk-block index tables.  No
+    XLA gather, no padded activation copy (only rows pad to the M block).
+    Bit-identical to gather="xla", the pre-fold path kept for A/B
+    benchmarking: one XLA take of x into fused-padded order, then
+    "blocked" kernel launches.
+
+    act_dtype="int8": per-token dynamic absmax quantization of x; the
+    kernel consumes int8 activations and the (m, 1) f32 scales fold into
+    the output block at the last K step of the LAST group's launch (the
+    XLA-gather path applies the same scales as one XLA multiply — the two
+    paths stay bit-identical).
     """
+    act_dtype = normalize_act_dtype(act_dtype)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    xg = jnp.take(x2, pqt.gather_idx, axis=1, mode="fill", fill_value=0)
+    scale = None
+    if act_dtype == "int8":
+        x2, scale = quantize_activations(x2)
     m = x2.shape[0]
     bm = min(bm, _round_up(m, 8))
-    xp = _pad_to(xg, 0, bm)
 
-    y = None
-    off = 0
-    for g in pqt.groups:
-        xs = jax.lax.slice_in_dim(xp, off, off + g.k_padded, axis=1)
-        y = dm.dequant_matmul(
-            xs, g.planes, g.codebook, g.out_idx, g.out_val,
-            bits=g.bits, n=pqt.n_padded, bm=bm, bn=pqt.bn, bk=g.bk,
-            interpret=interpret, compute_dtype=compute_dtype, acc=y)
-        off += g.k_padded
-    return y[:m, :pqt.rows].reshape(lead + (pqt.rows,)).astype(x.dtype)
+    if gather == "xla":
+        xg = jnp.take(x2, pqt.gather_idx, axis=1, mode="fill", fill_value=0)
+        xp = _pad_to(xg, 0, bm)
+        y = None
+        off = 0
+        for g in pqt.groups:
+            xs = jax.lax.slice_in_dim(xp, off, off + g.k_padded, axis=1)
+            y = dm.dequant_matmul(
+                xs, g.planes, g.codebook, g.out_idx, g.out_val,
+                bits=g.bits, n=pqt.n_padded, bm=bm, bn=pqt.bn, bk=g.bk,
+                interpret=interpret, compute_dtype=compute_dtype, acc=y)
+            off += g.k_padded
+        y = y[:m, :pqt.rows]
+        if scale is not None:
+            y = y * scale
+    elif gather == "kernel":
+        xp = _pad_to(x2, 0, bm)
+        sp = _pad_to(scale, 0, bm) if scale is not None else None
+        y = None
+        for gi, g in enumerate(pqt.groups):
+            aligned = g.x_start is not None
+            y = dm.dequant_matmul(
+                xp, g.planes, g.codebook, g.out_idx, g.out_val,
+                bits=g.bits, n=pqt.n_padded, bm=bm, bn=pqt.bn, bk=g.bk,
+                interpret=interpret, compute_dtype=compute_dtype, acc=y,
+                x_mode="aligned" if aligned else "gathered",
+                x_base=g.x_start // g.bk if aligned else 0,
+                k_cols=g.k_cols, x_idx=g.x_idx,
+                x_scale=sp if gi == len(pqt.groups) - 1 else None)
+        y = y[:m, :pqt.rows]
+    else:
+        raise ValueError(f"unknown gather mode {gather!r} "
+                         "(expected 'kernel' or 'xla')")
+    return y.reshape(lead + (pqt.rows,)).astype(x.dtype)
 
 
-def _prepared_ref_qmatmul(x: Array, pqt: PreparedQuantizedTensor) -> Array:
+def _prepared_ref_qmatmul(x: Array, pqt: PreparedQuantizedTensor,
+                          act_dtype=None) -> Array:
     """XLA path over the prepared layout.  Unlike ref_qmatmul it never
     scatters W back into original column order: the gather index already
     aligned the activations with the fused group layout, so the matmul is a
     plain per-group dequant + dot accumulation (padded K slots have zero
-    codebooks and idx=-1 outliers, so they contribute exactly zero)."""
+    codebooks and idx=-1 outliers, so they contribute exactly zero).
+    act_dtype="int8" applies the same per-token absmax quantization as the
+    kernel path (int8-exact values through the dot, one scale multiply at
+    the end)."""
     rows = pqt.rows
-    xg = jnp.take(x.astype(jnp.float32), pqt.gather_idx, axis=-1,
-                  mode="fill", fill_value=0)
+    xf = x.astype(jnp.float32)
+    scale = None
+    if normalize_act_dtype(act_dtype) == "int8":
+        xq, scale = quantize_activations(xf)
+        xf = xq.astype(jnp.float32)
+    xg = jnp.take(xf, pqt.gather_idx, axis=-1, mode="fill", fill_value=0)
     y = jnp.zeros(x.shape[:-1] + (rows,), jnp.float32)
     off = 0
     for g in pqt.groups:
@@ -138,6 +213,8 @@ def _prepared_ref_qmatmul(x: Array, pqt: PreparedQuantizedTensor) -> Array:
         y = y + jnp.einsum("...k,nk->...n", xs, Wg[:, :g.k_cols],
                            preferred_element_type=jnp.float32)
         off += g.k_padded
+    if scale is not None:
+        y = y * scale
     return y
 
 
@@ -148,6 +225,8 @@ def qmatmul(
     use_kernel: bool = False,
     interpret: bool = True,
     compute_dtype=None,
+    act_dtype=None,
+    gather: str = "kernel",
 ) -> Array:
     """x (..., K) @ dequantize(qt)^T -> (..., N) for a QuantizedTensor or a
     PreparedQuantizedTensor.
@@ -156,15 +235,26 @@ def qmatmul(
     the CPU dry-run lowers (Pallas TPU kernels can't lower on the CPU
     backend); its HLO cost is the *baseline* the kernel improves on.
     use_kernel=True: the Pallas kernel (interpret=True on CPU for tests).
-    Prepared tensors take the fused path: one launch per distinct bit-width.
+    Prepared tensors take the fused path: one launch per distinct bit-width,
+    with the stripe-permutation gather folded into the kernel (gather=
+    "kernel", default) or as the pre-fold XLA take (gather="xla" — the A/B
+    baseline, bit-identical).  act_dtype="int8" opts activations into
+    per-token dynamic int8 quantization (prepared tensors only).
     """
     if compute_dtype is None:
         compute_dtype = jnp.float32 if x.dtype == jnp.float32 else jnp.bfloat16
     if isinstance(qt, PreparedQuantizedTensor):
         if not use_kernel:
-            return _prepared_ref_qmatmul(x, qt).astype(x.dtype)
+            return _prepared_ref_qmatmul(x, qt,
+                                         act_dtype=act_dtype).astype(x.dtype)
         return prepared_qmatmul(x, qt, interpret=interpret,
-                                compute_dtype=compute_dtype)
+                                compute_dtype=compute_dtype,
+                                gather=gather, act_dtype=act_dtype)
+    if normalize_act_dtype(act_dtype) is not None:
+        raise ValueError(
+            "act_dtype quantization needs an ahead-of-time plan — prepare "
+            "the tensor first (QuantizedTensor.prepare / prepare_tree; "
+            "ServingEngine does this at init unless prepare=False)")
     if not use_kernel:
         return ref_lib.ref_qmatmul(x, qt).astype(x.dtype)
 

@@ -12,8 +12,14 @@ it once, at load/quantize time:
       carry zero codebooks and idx=-1 outliers, so they contribute exactly
       zero and never need masking at matmul time;
   (b) the per-stripe column slicing is folded into ONE gather index over
-      the activation's K axis (`jnp.take(..., mode="fill")`; padded slots
-      point one past the end and gather zeros);
+      the activation's K axis, kept in two forms: `gather_idx` (flat, the
+      XLA `jnp.take(..., mode="fill")` path and the dequantize oracle) and
+      per-group `x_idx` per-bk-block tables the kernel consumes directly —
+      plus a static per-group alignment analysis: when a group's fused K
+      order is exactly original column order (single-bit-width tensors;
+      `build_quantized_tensor` emits an identity permutation), `x_start`
+      is set and the kernel fetches raw x blocks with NO indexing at all
+      (DESIGN.md §9);
   (c) outlier slots are pre-validated: the per-column count is converted
       to idx=-1 padding once, instead of a mask per matmul;
   (d) stripes are grouped by bit-width and concatenated along K, so a
@@ -29,10 +35,12 @@ preparation (serve/engine.py prepares every leaf at construction).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import packing
 from repro.core.quantized import QuantizedTensor
@@ -53,9 +61,15 @@ class PlanGroup:
     codebook: Array             # (k_padded, 2**bits) f32, zero at padding
     out_idx: Optional[Array]    # (k_out, k_padded) int32, -1 = no outlier
     out_val: Optional[Array]    # (k_out, k_padded) f32
+    x_idx: Optional[Array]      # (k_padded//bk, bk) int32 per-block x column
+    #                             tables (None when x_start is set)
     bits: int                   # static
     bk: int                     # static — K block size for this group
     k_cols: int                 # static — unpadded fused K of the group
+    x_start: Optional[int] = None   # static — set iff the fused K order is
+    #                             original columns [x_start, x_start+k_cols)
+    #                             with x_start % bk == 0: the kernel reads
+    #                             raw x blocks, no per-column indexing
 
     @property
     def k_padded(self) -> int:
@@ -74,8 +88,8 @@ class PlanGroup:
 
 jax.tree_util.register_dataclass(
     PlanGroup,
-    data_fields=["planes", "codebook", "out_idx", "out_val"],
-    meta_fields=["bits", "bk", "k_cols"])
+    data_fields=["planes", "codebook", "out_idx", "out_val", "x_idx"],
+    meta_fields=["bits", "bk", "k_cols", "x_start"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +115,13 @@ class PreparedQuantizedTensor:
         """Whole (bn, ·) output tiles along N — the unit in which the plan
         may be split across devices."""
         return self.n_padded // self.bn
+
+    @property
+    def x_gather_free(self) -> bool:
+        """True iff every group fetches raw x blocks without per-column
+        indexing (all groups aligned) — the fused matmul then contains no
+        gather of any kind, in-kernel or XLA."""
+        return all(g.x_start is not None for g in self.groups)
 
     def shards_whole_tiles(self, parts: int) -> bool:
         """True iff splitting N into `parts` equal contiguous shards keeps
@@ -170,6 +191,59 @@ def validated_outliers(qt: QuantizedTensor):
             jnp.where(valid, val_p, 0.0).astype(jnp.float32))
 
 
+def _static_group_layout(stripes, bk: int):
+    """Per-bit-width group layout derived from static stripe metadata only
+    (bits + column counts) — identical for every member of a layer stack.
+    Returns [(bits, [(perm_offset, stripe_index), ...], k_cols, g_bk,
+    k_padded)]; members are INDICES so `_build_plan` resolves them against
+    its own (possibly vmapped) argument, never against closure constants.
+    """
+    offsets = []
+    off = 0
+    for s in stripes:
+        offsets.append(off)
+        off += s.n_cols
+    layout = []
+    for bits in sorted({s.bits for s in stripes}):
+        members = [(o, si) for si, (o, s) in enumerate(zip(offsets, stripes))
+                   if s.bits == bits]
+        k_cols = sum(stripes[si].n_cols for _, si in members)
+        g_bk = min(bk, _round_up(k_cols, 128))
+        layout.append((bits, members, k_cols, g_bk, _round_up(k_cols, g_bk)))
+    return layout
+
+
+def _aligned_x_starts(qt: QuantizedTensor, layout):
+    """Per-group x_start, or None where the group needs per-column index
+    tables.  A group is *aligned* when its fused K order is exactly the
+    original columns [s0, s0 + k_cols) with s0 a bk multiple — true for
+    every single-bit-width tensor (`build_quantized_tensor` sorts columns
+    ascending within each bit-class, so one class == identity).  Decided
+    from concrete col_perm values at plan time; under tracing (prepare
+    inside jit) it conservatively falls back to index tables.  For layer
+    stacks the whole stack must agree (the flag is static, shared by every
+    member)."""
+    try:
+        perm = np.asarray(qt.col_perm)
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        # traced col_perm (prepare under jit/vmap): no static analysis —
+        # every group conservatively takes the index-table path.  Anything
+        # else np.asarray raises is a real defect and must propagate.
+        return [None] * len(layout)
+    flat = perm.reshape(-1, perm.shape[-1])
+    starts = []
+    for bits, members, k_cols, g_bk, _k_padded in layout:
+        idx = np.concatenate(
+            [flat[:, o:o + qt.stripes[si].n_cols] for o, si in members],
+            axis=1)
+        s0 = int(idx[0, 0])
+        ok = (s0 % g_bk == 0 and np.array_equal(
+            idx, np.broadcast_to(np.arange(k_cols) + s0, idx.shape)))
+        starts.append(s0 if ok else None)
+    return starts
+
+
 def prepare_for_inference(
     qt: QuantizedTensor,
     *,
@@ -188,75 +262,77 @@ def prepare_for_inference(
     AP/OR allocations depend only on (rows, cols), so every member shares
     one static plan layout, and the stacked prepared leaves slice per
     layer through scan / tree_map exactly like the stacked input did.
+    The x alignment analysis runs on the whole stack BEFORE the vmap
+    (x_start is static meta, so all members must agree on it).
     """
+    layout = _static_group_layout(qt.stripes, bk)
+    x_starts = _aligned_x_starts(qt, layout)
+    build = functools.partial(_build_plan, bn=bn, layout=layout,
+                              x_starts=x_starts)
     stack_dims = qt.stripes[0].packed.ndim - 2
-    if stack_dims > 0:
-        fn = lambda q: prepare_for_inference(q, bn=bn, bk=bk)  # noqa: E731
-        for _ in range(stack_dims):
-            fn = jax.vmap(fn)
-        return fn(qt)
+    for _ in range(stack_dims):
+        build = jax.vmap(build)
+    return build(qt)
 
+
+def _build_plan(qt: QuantizedTensor, *, bn: int, layout,
+                x_starts) -> PreparedQuantizedTensor:
     rows = qt.rows
     bn = min(bn, _round_up(rows, 32))
     n_padded = _round_up(rows, bn)
 
     oi, ov = validated_outliers(qt)
 
-    # stripe offsets into the permuted column order
-    offsets = []
-    off = 0
-    for s in qt.stripes:
-        offsets.append(off)
-        off += s.n_cols
-
     groups = []
     idx_parts = []
-    for bits in sorted({s.bits for s in qt.stripes}):
-        members = [(o, s) for o, s in zip(offsets, qt.stripes)
-                   if s.bits == bits]
-        k_cols = sum(s.n_cols for _, s in members)
-        g_bk = min(bk, _round_up(k_cols, 128))
-        k_padded = _round_up(k_cols, g_bk)
-
+    for (bits, members, k_cols, g_bk, k_padded), x_start \
+            in zip(layout, x_starts):
         widths = packing.plane_widths(bits)
         planes = []
         for wi, w in enumerate(widths):
             cpw = 32 // w
-            parts = [packing.split_planes(s.packed, bits, rows)[wi]
-                     for _, s in members]
+            parts = [packing.split_planes(qt.stripes[si].packed, bits,
+                                          rows)[wi]
+                     for _, si in members]
             p = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
             p = jnp.pad(p, ((0, n_padded // cpw - p.shape[0]),
                             (0, k_padded - k_cols)))
             planes.append(p)
 
-        cb = jnp.concatenate([s.codebook for _, s in members], axis=0) \
-            if len(members) > 1 else members[0][1].codebook
+        cb = jnp.concatenate(
+            [qt.stripes[si].codebook for _, si in members], axis=0) \
+            if len(members) > 1 else qt.stripes[members[0][1]].codebook
         cb = jnp.pad(cb.astype(jnp.float32), ((0, k_padded - k_cols), (0, 0)))
 
         g_oi = g_ov = None
         if oi is not None:
             g_oi = jnp.concatenate(
-                [jax.lax.slice_in_dim(oi, o, o + s.n_cols, axis=1)
-                 for o, s in members], axis=1)
+                [jax.lax.slice_in_dim(oi, o, o + qt.stripes[si].n_cols,
+                                      axis=1)
+                 for o, si in members], axis=1)
             g_ov = jnp.concatenate(
-                [jax.lax.slice_in_dim(ov, o, o + s.n_cols, axis=1)
-                 for o, s in members], axis=1)
+                [jax.lax.slice_in_dim(ov, o, o + qt.stripes[si].n_cols,
+                                      axis=1)
+                 for o, si in members], axis=1)
             g_oi = jnp.pad(g_oi, ((0, 0), (0, k_padded - k_cols)),
                            constant_values=-1)
             g_ov = jnp.pad(g_ov, ((0, 0), (0, k_padded - k_cols)))
 
         idx = jnp.concatenate(
-            [jax.lax.slice_in_dim(qt.col_perm, o, o + s.n_cols)
-             for o, s in members]) if len(members) > 1 \
-            else jax.lax.slice_in_dim(qt.col_perm, members[0][0],
-                                      members[0][0] + members[0][1].n_cols)
-        idx_parts.append(jnp.pad(idx.astype(jnp.int32),
-                                 (0, k_padded - k_cols),
-                                 constant_values=qt.cols))
+            [jax.lax.slice_in_dim(qt.col_perm, o, o + qt.stripes[si].n_cols)
+             for o, si in members]) if len(members) > 1 \
+            else jax.lax.slice_in_dim(
+                qt.col_perm, members[0][0],
+                members[0][0] + qt.stripes[members[0][1]].n_cols)
+        idx = jnp.pad(idx.astype(jnp.int32), (0, k_padded - k_cols),
+                      constant_values=qt.cols)
+        idx_parts.append(idx)
 
         groups.append(PlanGroup(
             planes=tuple(planes), codebook=cb, out_idx=g_oi, out_val=g_ov,
-            bits=bits, bk=g_bk, k_cols=k_cols))
+            x_idx=(None if x_start is not None
+                   else idx.reshape(k_padded // g_bk, g_bk)),
+            bits=bits, bk=g_bk, k_cols=k_cols, x_start=x_start))
 
     return PreparedQuantizedTensor(
         groups=tuple(groups),

@@ -49,3 +49,15 @@ def ref_qmatmul(x: Array, qt: QuantizedTensor) -> Array:
     W = qt.dequantize(jnp.float32)
     y = jnp.einsum("...k,nk->...n", x.astype(jnp.float32), W)
     return y
+
+
+def ref_act_int8_bound(x: Array, W: Array) -> Array:
+    """Per-output-element error bound of the int8 activation path vs f32
+    (DESIGN.md §9): quantization perturbs each activation by at most
+    scale/2 (round-to-nearest, absmax scaling never clips), so
+    |Δy[m, n]| <= scale_m / 2 * ||W[n, :]||_1.  x (..., K), W (N, K) ->
+    bound (..., N).  The bound covers quantization error only; callers add
+    a small epsilon for f32 accumulation-order noise."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    return 0.5 * scale * jnp.sum(jnp.abs(W.astype(jnp.float32)), axis=1)

@@ -71,6 +71,18 @@ def main():
                          "(lossless for greedy decoding)")
     ap.add_argument("--draft-bits", type=int, default=2,
                     help="code bit-width of the speculative draft model")
+    ap.add_argument("--draft-plan-bn", type=int, default=0,
+                    help="plan N-tile cap for the DRAFT's prepared plans "
+                         "(0 = inherit the target's; the 2-bit draft's "
+                         "skinnier groups often want smaller tiles)")
+    ap.add_argument("--draft-plan-bk", type=int, default=0,
+                    help="plan K-block cap for the draft's prepared plans "
+                         "(0 = inherit)")
+    ap.add_argument("--act-dtype", choices=("f32", "int8"), default="f32",
+                    help="activation precision for quantized matmuls: int8 "
+                         "= per-token dynamic absmax quantization folded "
+                         "into the fused kernel (opt-in; changes numerics "
+                         "within the documented bound, DESIGN.md §9)")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP device mesh, e.g. 2x4 (data x model)")
     ap.add_argument("--dp", type=int, default=0,
@@ -127,7 +139,13 @@ def main():
     eng = ServingEngine(params, cfg, n_slots=args.slots,
                         max_len=args.max_len, min_bucket=args.min_bucket,
                         bucketing=not args.no_bucketing, mesh=mesh,
-                        draft_params=draft_params, spec=spec)
+                        draft_params=draft_params, spec=spec,
+                        draft_plan_bn=args.draft_plan_bn or None,
+                        draft_plan_bk=args.draft_plan_bk or None,
+                        act_dtype=args.act_dtype)
+    if args.act_dtype != "f32":
+        print(f"[serve] activations: per-token {args.act_dtype} "
+              f"(opt-in weight-activation quantized serving)")
     rng = np.random.default_rng(0)
     pending = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12)).tolist()
                for _ in range(args.requests)]

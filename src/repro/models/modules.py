@@ -111,19 +111,38 @@ def record_expert_inputs(name: str, x_e: Array):
 
 class QuantMode:
     """'ref' = XLA dequant+dot (CPU dry-run path); 'kernel' = Pallas kernel
-    (interpret=True off-TPU)."""
+    (interpret=True off-TPU).  `act_dtype` opts quantized matmuls into
+    per-token int8 activation quantization ("int8"; None/"f32" = full
+    precision) — an engine-level deployment knob (DESIGN.md §9), read at
+    trace time like `mode`."""
     mode: str = "ref"
     interpret: bool = True
+    act_dtype: Optional[str] = None
 
 
 @contextlib.contextmanager
-def quant_mode(mode: str, interpret: bool = True):
-    prev = (QuantMode.mode, QuantMode.interpret)
+def quant_mode(mode: str, interpret: bool = True,
+               act_dtype: Optional[str] = None):
+    prev = (QuantMode.mode, QuantMode.interpret, QuantMode.act_dtype)
     QuantMode.mode, QuantMode.interpret = mode, interpret
+    QuantMode.act_dtype = act_dtype
     try:
         yield
     finally:
-        QuantMode.mode, QuantMode.interpret = prev
+        QuantMode.mode, QuantMode.interpret, QuantMode.act_dtype = prev
+
+
+@contextlib.contextmanager
+def activation_quant(act_dtype: Optional[str]):
+    """Scope ONLY the activation quantization mode (the ServingEngine wraps
+    its jitted steps with this so `mode`/`interpret` stay whatever the
+    caller set)."""
+    prev = QuantMode.act_dtype
+    QuantMode.act_dtype = act_dtype
+    try:
+        yield
+    finally:
+        QuantMode.act_dtype = prev
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +159,8 @@ def dense(p: Dict[str, Any], x: Array, name: str = "dense") -> Array:
         from repro.kernels import ops as kops
         y = kops.qmatmul(x, kernel,
                          use_kernel=(QuantMode.mode == "kernel"),
-                         interpret=QuantMode.interpret)
+                         interpret=QuantMode.interpret,
+                         act_dtype=QuantMode.act_dtype)
     else:
         _maybe_record(full, x)
         y = x @ kernel.astype(x.dtype)

@@ -28,7 +28,11 @@ equal-length prompts).
 Weights may be dense or CLAQ-quantized — QuantizedTensor leaves are
 compiled into their ahead-of-time inference plans once at init, and the
 model dispatches per leaf, so the same engine serves fp and 2/3/4-bit
-models.
+models.  ``act_dtype="int8"`` additionally opts every quantized matmul
+into per-token dynamic int8 activation quantization (weight-activation
+quantized serving, DESIGN.md §9) — opt-in because it changes numerics
+(bounded by scale/2 * ||W||_1 per output element), unlike every other
+engine knob, which is bit-exact.
 
 Multi-device serving: pass ``mesh=`` (e.g. ``jax.make_mesh((2, 4),
 ("data", "model"))``) and the engine device_puts the prepared params with
@@ -90,8 +94,10 @@ import numpy as np
 
 from repro.dist import context as dctx
 from repro.dist import sharding as shd
+from repro.kernels import ops as kops
 from repro.kernels.plan import prepare_tree
 from repro.models import api
+from repro.models import modules as nn
 
 from . import speculative
 from .bucketing import BucketingPolicy
@@ -201,11 +207,30 @@ class ServingEngine:
                  min_bucket: int = 16, bucketing: bool = True,
                  mesh=None, plan_bn: Optional[int] = None,
                  plan_bk: Optional[int] = None,
-                 draft_params=None, spec: Optional[SpecConfig] = None):
+                 draft_params=None, spec: Optional[SpecConfig] = None,
+                 draft_plan_bn: Optional[int] = None,
+                 draft_plan_bk: Optional[int] = None,
+                 act_dtype: Optional[str] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
                 "admission needs a frames input and a length-masked encoder")
+        act_dtype = kops.normalize_act_dtype(act_dtype)
+        if act_dtype is not None and not prepare:
+            raise ValueError(
+                "act_dtype='int8' needs ahead-of-time plans — drop "
+                "prepare=False (the int8 path runs on prepared leaves only)")
+        if draft_plan_bn is not None or draft_plan_bk is not None:
+            if spec is None:
+                raise ValueError(
+                    "draft_plan_bn/draft_plan_bk tune the speculative "
+                    "draft's plan tiles — pass spec=SpecConfig(...) and "
+                    "draft_params")
+            if not prepare:
+                raise ValueError(
+                    "draft_plan_bn/draft_plan_bk shape the draft's "
+                    "ahead-of-time plans — they do nothing with "
+                    "prepare=False, so that combination is rejected")
         if spec is not None:
             speculative.validate_spec_support(cfg)
             if draft_params is None:
@@ -232,6 +257,7 @@ class ServingEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.mesh = mesh
+        self.act_dtype = act_dtype
         # Padding additionally requires linear (non-ring) caches: a
         # sliding-window ring keeps the LAST W keys, so a padded suffix
         # would evict valid ones and the masked insert's linear-position
@@ -279,9 +305,14 @@ class ServingEngine:
         self.spec_drafted = 0
         self.spec_accepted = 0
 
+        # act_dtype scopes the per-token int8 activation quantization of
+        # every quantized matmul inside the jitted steps; QuantMode.mode /
+        # .interpret stay whatever the ambient context set (the wrap runs
+        # at trace time — QuantMode is read inside dense()).
         def _decode_fn(p, t, c):
             self.decode_traces += 1
-            return api.decode_step(p, cfg, t, c)
+            with nn.activation_quant(self.act_dtype):
+                return api.decode_step(p, cfg, t, c)
 
         # One stable jitted prefill keyed on the (batch, bucket) operand
         # shape: admissions at a previously seen shape hit the compile
@@ -289,8 +320,9 @@ class ServingEngine:
         # they never force a retrace.
         def _prefill_fn(p, t, c, lens):
             self.prefill_traces += 1
-            return api.prefill_step(p, cfg, {"tokens": t}, c,
-                                    logits_at=lens - 1)
+            with nn.activation_quant(self.act_dtype):
+                return api.prefill_step(p, cfg, {"tokens": t}, c,
+                                        logits_at=lens - 1)
 
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn)
@@ -306,7 +338,17 @@ class ServingEngine:
             # structure — fewer stripes at 2-bit — so they could never
             # share a compile cache entry with the target anyway) and
             # carry their own trace counters.
-            self.draft_params = (prepare_tree(draft_params, **prep_kw)
+            # Draft-specific plan tiles: the 2-bit draft's groups span
+            # skinnier K stripes and smaller matrices benefit from smaller
+            # output tiles, so its bn/bk caps are tunable independently of
+            # the target's (ROADMAP spec item b); they default to the
+            # target's caps.
+            dprep_kw = dict(prep_kw)
+            if draft_plan_bn is not None:
+                dprep_kw["bn"] = draft_plan_bn
+            if draft_plan_bk is not None:
+                dprep_kw["bk"] = draft_plan_bk
+            self.draft_params = (prepare_tree(draft_params, **dprep_kw)
                                  if prepare else draft_params)
             self.draft_cache = api.make_cache(cfg, n_slots, max_len,
                                               dtype=dtype)
@@ -320,19 +362,22 @@ class ServingEngine:
 
             def _draft_decode_fn(p, t, c):
                 self.draft_decode_traces += 1
-                return api.decode_step(p, cfg, t, c)
+                with nn.activation_quant(self.act_dtype):
+                    return api.decode_step(p, cfg, t, c)
 
             def _draft_prefill_fn(p, t, c):
                 self.draft_prefill_traces += 1
                 # cache only: the draft's prefill logits are never read,
                 # and not returning them lets XLA drop the whole-bucket
                 # unembedding matmul from the compiled draft prefill
-                _, cache = api.prefill_step(p, cfg, {"tokens": t}, c)
+                with nn.activation_quant(self.act_dtype):
+                    _, cache = api.prefill_step(p, cfg, {"tokens": t}, c)
                 return cache
 
             def _verify_fn(p, t, c):
                 self.verify_traces += 1
-                return api.decode_span(p, cfg, t, c)
+                with nn.activation_quant(self.act_dtype):
+                    return api.decode_span(p, cfg, t, c)
 
             self._draft_decode = jax.jit(_draft_decode_fn)
             self._draft_prefill = jax.jit(_draft_prefill_fn)
@@ -628,6 +673,7 @@ class ServingEngine:
             "bucket_misses": s.misses,
             "bucket_hit_rate": s.hit_rate,
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            "act_dtype": self.act_dtype or "f32",
             # decode-loop emission: tokens appended by step() over engine
             # steps (decode steps vanilla; speculation windows with spec)
             "emitted_tokens": self.emitted_tokens,

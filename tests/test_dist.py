@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.dist.hlo_analysis import analyze_hlo
+from repro.dist.hlo_analysis import analyze_hlo, gather_instructions
 
 
 def test_hlo_analyzer_counts_loops_exactly():
@@ -55,6 +55,30 @@ def test_hlo_analyzer_fused_elementwise_cost():
     ew = res["elementwise_flops"]
     assert ew >= 3 * 9 * 32 * 32
     assert ew <= 3 * 9 * 32 * 32 + 3 * 4 * 32 * 32 + 1024
+
+
+def test_gather_instruction_counter():
+    """`gather_instructions` lists gather / dynamic-slice ops per kind
+    with result bytes — fusion bodies included, each once, collectives
+    (all-gather) NOT miscounted as gathers."""
+    def g(x, idx):
+        y = jnp.take(x, idx, axis=1)               # gather
+        z = jax.lax.dynamic_slice(x, (0, 0), (8, 16))   # dynamic-slice
+        return y.sum() + z.sum()
+    compiled = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((8, 64), jnp.float32),
+        jax.ShapeDtypeStruct((16,), jnp.int32)).compile()
+    got = gather_instructions(compiled.as_text())
+    kinds = [k for k, _ in got]
+    assert kinds.count("gather") == 1
+    # the gather's result is (8, 16) f32
+    assert dict(got)["gather"] == 8 * 16 * 4
+
+    def h(x):
+        return jnp.tanh(x) * 2.0                   # purely elementwise
+    compiled = jax.jit(h).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    assert gather_instructions(compiled.as_text()) == []
 
 
 def test_hlo_analyzer_elementwise_weights_from_text():

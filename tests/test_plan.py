@@ -58,6 +58,11 @@ def _check_parity(qt, m=7, seed=0, atol=1e-3):
     y = ops.qmatmul(x, pqt, use_kernel=True, interpret=True)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=atol)
+    # the default kernel path folds the gather into the kernel; it must be
+    # BITWISE the pre-fold XLA-gather path at every layout in this suite
+    y_pre = ops.prepared_qmatmul(x, pqt, gather="xla")
+    assert np.array_equal(np.asarray(y), np.asarray(y_pre)), \
+        "in-kernel gather diverged bitwise from the XLA-gather path"
     y_xla = ops.qmatmul(x, pqt, use_kernel=False)
     np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
@@ -131,9 +136,63 @@ def test_launch_count_is_distinct_bitwidths():
     prepared_launches = dm.launch_count - before
     assert prepared_launches == len({b for b, _ in spec}) == 3
 
+    # folding the gather into the kernel must not change the launch
+    # contract: both gather modes issue one launch per distinct bit-width
+    before = dm.launch_count
+    y_pre = ops.prepared_qmatmul(x, pqt, gather="xla")
+    assert dm.launch_count - before == prepared_launches
+    assert np.array_equal(np.asarray(y_prepared), np.asarray(y_pre))
+
     np.testing.assert_allclose(np.asarray(y_prepared),
                                np.asarray(y_unprepared),
                                rtol=1e-4, atol=1e-3)
+
+
+def _with_identity_perm(qt):
+    return QuantizedTensor(
+        stripes=qt.stripes, col_perm=jnp.arange(qt.cols, dtype=jnp.int32),
+        out_idx=qt.out_idx, out_val=qt.out_val, out_count=qt.out_count,
+        shape=qt.shape)
+
+
+def test_identity_perm_plans_are_x_aligned():
+    """Single-bit-width tensors carry an identity column permutation
+    (build_quantized_tensor sorts within each bit-class), so their plans
+    must drop per-column indexing entirely: x_start set, x_idx None — the
+    kernel then reads raw x blocks and the matmul is gather-free."""
+    rng = np.random.default_rng(21)
+    qt = _with_identity_perm(
+        _make_qt(rng, rows=64, stripe_spec=[(3, 200)], k_out=2))
+    pqt = _check_parity(qt)
+    assert pqt.x_gather_free
+    assert pqt.groups[0].x_start == 0 and pqt.groups[0].x_idx is None
+
+    # the end-to-end integer-bit recipe really hits this path
+    W = rng.normal(size=(64, 96)).astype(np.float32)
+    qte, _, _ = quantize_matrix(jnp.asarray(W), None, CLAQConfig(
+        bits=3, method="kmeans", kmeans_iters=3, gptq_blocksize=32))
+    assert prepare_for_inference(qte).x_gather_free
+
+
+def test_permuted_plans_carry_block_index_tables():
+    """Permuted / mixed-precision layouts fall back to per-bk-block index
+    tables: x_idx holds exactly the group's slice of gather_idx (same
+    fused order — the bit-identity contract), padding slots = cols."""
+    rng = np.random.default_rng(22)
+    qt = _make_qt(rng, rows=64, stripe_spec=[(2, 80), (4, 48)], k_out=2)
+    pqt = _check_parity(qt)
+    assert not pqt.x_gather_free
+    off = 0
+    for g in pqt.groups:
+        assert g.x_start is None and g.x_idx.shape == (g.k_padded // g.bk,
+                                                       g.bk)
+        np.testing.assert_array_equal(
+            np.asarray(g.x_idx).ravel(),
+            np.asarray(pqt.gather_idx[off:off + g.k_padded]))
+        off += g.k_padded
+    # padded slots point at `cols` (the zero fill), never at a real column
+    pad = np.asarray(pqt.groups[0].x_idx).ravel()[pqt.groups[0].k_cols:]
+    assert (pad == qt.cols).all()
 
 
 def test_plan_cached_on_tensor_and_prepare_tree():

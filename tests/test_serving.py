@@ -138,6 +138,82 @@ def test_bucketed_matches_unbucketed_on_quantized_model(quantized_model):
     assert eng_b.prefill_traces < eng_u.prefill_traces
 
 
+def test_bucketed_matches_unbucketed_with_int8_activations(quantized_model):
+    """The opt-in int8 activation path keeps the engine's structural
+    invariants: activation quantization is per-token (elementwise per
+    position), so bucketed admission still emits tokens bit-identical to
+    unbucketed admission under act_dtype='int8' — and the int8 engine
+    runs the same machinery end to end on the AP+OR plans."""
+    cfg, qparams = quantized_model
+    prompts = [[1, 2], [3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13, 14, 15, 16]]
+
+    eng_b = ServingEngine(qparams, cfg, n_slots=3, max_len=64, min_bucket=8,
+                          act_dtype="int8")
+    toks_b = _serve(eng_b, prompts, max_new=5)
+    eng_u = ServingEngine(qparams, cfg, n_slots=3, max_len=64,
+                          bucketing=False, act_dtype="int8")
+    toks_u = _serve(eng_u, prompts, max_new=5)
+
+    assert toks_b == toks_u
+    assert all(len(t) == 5 for t in toks_b)
+    assert eng_b.stats()["act_dtype"] == "int8"
+
+
+def test_ap_kernel_decode_gathers_are_tile_sized(quantized_model, fp_model):
+    """Mixed-precision (AP) plans cannot drop indexing entirely — the
+    kernel takes each tile's columns from a VMEM-resident x block.  The
+    compiled kernel-mode decode step may therefore add gathers over the
+    dense baseline, but every one of them must be a TILE-sized in-kernel
+    take, never the old activation-sized XLA gather (whose result spans
+    the whole fused K axis of a matmul)."""
+    from repro.dist.hlo_analysis import gather_instructions
+    from repro.kernels.plan import PreparedQuantizedTensor
+    from repro.models import modules as nn
+
+    cfg, qparams = quantized_model
+    _, params = fp_model
+
+    def decode_gathers(p):
+        eng = ServingEngine(p, cfg, n_slots=2, max_len=32)
+        with nn.quant_mode("kernel", interpret=True):
+            txt = eng.lower_decode().compile().as_text()
+        return sorted(b for op, b in gather_instructions(txt)
+                      if op == "gather")
+
+    g_dense = decode_gathers(params)
+    g_quant = decode_gathers(qparams)
+
+    # worst-case in-kernel take result: (bm, bk) f32 with bm=8 decode rows
+    eng = ServingEngine(qparams, cfg, n_slots=2, max_len=32)
+    max_bk = 0
+    n_permuted_groups = 0
+
+    def visit(leaf):
+        nonlocal max_bk, n_permuted_groups
+        if isinstance(leaf, PreparedQuantizedTensor):
+            permuted = [g for g in leaf.groups if g.x_start is None]
+            n_permuted_groups += len(permuted)
+            if permuted:
+                max_bk = max(max_bk, max(g.bk for g in permuted))
+    jax.tree_util.tree_map(
+        visit, eng.params,
+        is_leaf=lambda l: isinstance(l, PreparedQuantizedTensor))
+    assert max_bk > 0, "AP model produced no permuted plan -> vacuous"
+
+    added = list(g_quant)
+    for b in g_dense:
+        if b in added:
+            added.remove(b)
+    tile_cap = 8 * max_bk * 4
+    assert all(b <= tile_cap for b in added), (
+        f"activation-sized gather on the kernel decode path: "
+        f"{[b for b in added if b > tile_cap]} (cap {tile_cap}B)")
+    # one take per permuted group per matmul CALLSITE (stacked layers scan
+    # over one traced body, so the stack multiplies nothing); XLA may
+    # dedupe but never multiply them
+    assert len(added) <= n_permuted_groups, (len(added), n_permuted_groups)
+
+
 def test_batched_admission_shares_one_prefill(fp_model):
     """Prompts in the same bucket are admitted in ONE batched prefill and
     match one-at-a-time admission token for token."""

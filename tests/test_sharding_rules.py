@@ -121,6 +121,46 @@ def test_prepared_unit_stacked_leaves_shard_packed_row_axis():
         assert all(s == P() for s in specs[field])
 
 
+def test_x_idx_tables_replicate_with_the_unit():
+    """The per-bk-block x index tables (the in-kernel gather's operand)
+    index the ACTIVATION's K axis, so they replicate like gather_idx —
+    both when the unit shards along N and when it stacks — and aligned
+    plans (identity permutation) carry no tables at all, so the spec tree
+    stays leaf-congruent for device_put either way."""
+    rng = np.random.default_rng(29)
+    qt = _make_qt(rng, 128, [(2, 80), (4, 48)], k_out=2)   # permuted
+    for stack in (False, True):
+        q = qt if not stack else jax.tree_util.tree_map(
+            lambda a: jnp.stack([a, a]), qt)
+        pqt = prepare_for_inference(q, bn=32)
+        assert not pqt.x_gather_free
+        specs = shd.spec_for_quantized(pqt, _ax(model=4))
+        found = []
+        for path, spec in jax.tree_util.tree_flatten_with_path(specs)[0]:
+            if ".x_idx" in jax.tree_util.keystr(path):
+                found.append(spec)
+        assert found and all(s == P() for s in found)
+        # spec tree must mirror the unit leaf-for-leaf (device_put contract)
+        assert (jax.tree_util.tree_structure(specs)
+                == jax.tree_util.tree_structure(
+                    jax.tree_util.tree_map(lambda _: P(), pqt)))
+
+    # aligned plan: x_idx is None everywhere, structure still congruent
+    ident = QuantizedTensor(
+        stripes=qt.stripes[:1],
+        col_perm=jnp.arange(qt.stripes[0].n_cols, dtype=jnp.int32),
+        out_idx=qt.out_idx[:, :qt.stripes[0].n_cols],
+        out_val=qt.out_val[:, :qt.stripes[0].n_cols],
+        out_count=qt.out_count[:qt.stripes[0].n_cols],
+        shape=(128, qt.stripes[0].n_cols))
+    pqt = prepare_for_inference(ident, bn=32)
+    assert pqt.x_gather_free
+    specs = shd.spec_for_quantized(pqt, _ax(model=4))
+    assert (jax.tree_util.tree_structure(specs)
+            == jax.tree_util.tree_structure(
+                jax.tree_util.tree_map(lambda _: P(), pqt)))
+
+
 def test_word_unaligned_bn_replicates():
     """A plan built with bn below the 32-row packing word (bn=16) has tile
     boundaries that fall mid-word for width-1 planes (3-bit high plane

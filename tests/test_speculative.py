@@ -242,6 +242,54 @@ def test_spec_matches_vanilla_on_quantized_pair(quantized_pair, gamma):
     assert st["emitted_tokens"] == sum(len(t) - 1 for t in toks_s)
 
 
+def test_draft_plan_tiles_tune_independently(quantized_pair):
+    """Draft-specific plan tuning (ROADMAP spec item b): draft_plan_bn
+    caps the DRAFT's prepared tile size without touching the target's
+    plans, and — tiles being a pure layout choice — greedy speculation
+    stays bit-identical to vanilla decode."""
+    from repro.kernels.plan import PreparedQuantizedTensor
+
+    cfg, qparams, dparams = quantized_pair
+    eng_v = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_v = _serve(eng_v, PROMPTS, max_new=8)
+
+    eng = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                        draft_params=dparams,
+                        spec=SpecConfig(gamma=2, draft_bits=2),
+                        draft_plan_bn=32)
+    assert _serve(eng, PROMPTS, max_new=8) == toks_v
+
+    def bns(tree):
+        out = []
+        jax.tree_util.tree_map(
+            lambda l: out.append(l.bn) if isinstance(
+                l, PreparedQuantizedTensor) else None,
+            tree, is_leaf=lambda l: isinstance(l, PreparedQuantizedTensor))
+        return out
+
+    assert all(bn <= 32 for bn in bns(eng.draft_params))
+    # the target keeps the default cap (its big matrices use bn > 32)
+    assert max(bns(eng.params)) > 32
+
+
+def test_spec_lossless_under_int8_activations(quantized_pair):
+    """Losslessness composes with A8: activation quantization is per-token
+    elementwise, so span-verify stays bitwise gamma+1 successive decodes
+    under int8 too — speculative int8 tokens must equal VANILLA int8
+    tokens (the composition the --act-dtype + --spec-gamma CLI serves)."""
+    cfg, qparams, dparams = quantized_pair
+    eng_v = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          act_dtype="int8")
+    toks_v = _serve(eng_v, PROMPTS, max_new=8)
+
+    eng_s = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          draft_params=dparams,
+                          spec=SpecConfig(gamma=2, draft_bits=2),
+                          act_dtype="int8")
+    assert _serve(eng_s, PROMPTS, max_new=8) == toks_v
+    assert eng_s.stats()["act_dtype"] == "int8"
+
+
 def test_spec_lossless_with_unrelated_draft(fp_model, unrelated_draft):
     """Emitted tokens never depend on the draft: an unrelated draft makes
     nearly every window reject (correction path), yet the stream is
