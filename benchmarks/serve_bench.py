@@ -17,14 +17,28 @@ collapses to ~0, which measures nothing.  Target and draft are quantized
 from the model's one set of tapped Hessians (the
 `claq_quantize_with_draft` contract with calibration amortized).
 
+The ROBUSTNESS scenario drives an engine through a seeded deterministic
+fault plan (serve/faults.py: NaN/Inf logit injection, cache-pressure
+windows forcing preemption+resume, bursty Poisson arrivals against a
+bounded queue, transient step failures absorbed by bounded retry) and
+ASSERTS the lifecycle contract instead of timing it: zero hangs, every
+submitted request terminal, FINISHED requests' tokens bit-identical to a
+clean engine's (including preempted-and-resumed ones), and an exact
+replay under the same seed.  Counters (terminal states, preemptions,
+resumes, backpressure) land in BENCH_serve.json next to the speed rows.
+It runs on an fp smoke model — lifecycle behavior is numerics-blind, so
+CI's `--inject-faults` mode skips the trained-model setup entirely.
+
 `serve_bench()` writes BENCH_serve.json at the repo root (the serving
-trajectory's counterpart to BENCH_kernel.json); CI runs `--smoke`.
+trajectory's counterpart to BENCH_kernel.json); CI runs `--smoke` and
+the fault-injection smoke `--smoke --inject-faults`.
 
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -33,7 +47,8 @@ import numpy as np
 
 from repro.core import APConfig, CLAQConfig, ORConfig, draft_config
 from repro.launch.quantize import quantize_model_params
-from repro.serve import ServingEngine, SpecConfig
+from repro.serve import (AdmissionRejected, FaultInjector, RetryPolicy,
+                         ServingEngine, SpecConfig, StepClock)
 
 _BENCH_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -57,7 +72,155 @@ def _run(eng, prompts, max_new):
     return [fin[u].tokens for u in uids], steps, t_decode
 
 
-def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False):
+def robustness_scenario(smoke: bool = False, seed: int = 0) -> dict:
+    """Seeded fault-plan survival run (see module docstring).  Returns the
+    counters recorded under ``results["robustness"]``; raises on any
+    lifecycle-contract violation (hang, non-terminal request, parity break,
+    replay divergence) so CI cannot silently pass a broken engine."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api
+
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    horizon = 24 if smoke else 48
+    # pressure_frac is tuned so the windows' limit (frac * max_len) falls
+    # BELOW running fills — a pressure window that never preempts anything
+    # would record a vacuous survival
+    injector_kw = dict(seed=seed, horizon=horizon, arrival_lambda=0.25,
+                       burst_every=10, burst_size=2, pressure_windows=2,
+                       pressure_frac=(0.15, 0.25))
+    max_new = 8 if smoke else 12
+    n_slots, max_len = 3, 48
+    prng = np.random.default_rng(1)
+    prompts = [prng.integers(1, cfg.vocab,
+                             size=prng.integers(3, 11)).tolist()
+               for _ in range(4 * horizon)]
+
+    def engine(**kw):
+        return ServingEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                             min_bucket=8, **kw)
+
+    def run_once():
+        injector = FaultInjector(**injector_kw)
+        clock = StepClock(step_ms=10.0)
+        eng = engine(guards=True, faults=injector, clock=clock,
+                     queue_depth=4, on_pressure="preempt")
+        retry = RetryPolicy(max_attempts=4, backoff_s=0.0)
+        submitted = []                       # (uid, prompt index)
+        pending = []
+        next_idx = 0
+        retries = backpressure = 0
+        step = 0
+        max_steps = 40 * horizon             # hang budget, far above need
+        while step < max_steps:
+            if step < injector.horizon:
+                for _ in range(injector.arrivals(step)):
+                    pending.append(next_idx)
+                    next_idx += 1
+            while pending:
+                idx = pending[0]
+                # every third request carries a tight SLO: under queueing
+                # and pressure windows some of these MUST abandon
+                dl = 150.0 if idx % 3 == 2 else None
+                try:
+                    uid = eng.submit(prompts[idx], max_new_tokens=max_new,
+                                     deadline_ms=dl)
+                except AdmissionRejected:
+                    backpressure += 1        # bounded queue pushed back
+                    break
+                submitted.append((uid, idx))
+                pending.pop(0)
+            _, r = retry.run(eng.step)
+            retries += r
+            clock.advance()
+            step += 1
+            if (step >= injector.horizon and not pending and not eng.active
+                    and not len(eng.queue)):
+                break
+        fin = eng.take_finished()
+        outcome = [(idx,
+                    fin[uid].state.value if uid in fin else "nonterminal",
+                    list(fin[uid].tokens) if uid in fin else None)
+                   for uid, idx in submitted]
+        return {"outcome": outcome, "stats": eng.stats(),
+                "retries": retries, "backpressure": backpressure,
+                "steps": step, "hang": step >= max_steps}
+
+    r1 = run_once()
+    assert not r1["hang"], (
+        f"robustness scenario did not drain in {r1['steps']} driver steps")
+    assert all(state != "nonterminal" for _, state, _ in r1["outcome"]), (
+        f"non-terminal requests survived the run: {r1['outcome']}")
+
+    # exact replay: same seed -> bit-identical outcomes and counters
+    r2 = run_once()
+    assert r1["outcome"] == r2["outcome"], "seeded fault plan did not replay"
+    assert r1["stats"]["lifecycle"] == r2["stats"]["lifecycle"]
+    assert r1["retries"] == r2["retries"]
+
+    # FINISHED parity: a clean engine over the same prompts must emit the
+    # same tokens — in particular for requests preempted and resumed
+    fin_idx = [idx for idx, state, _ in r1["outcome"] if state == "finished"]
+    assert fin_idx, "no request finished under the fault plan"
+    clean = engine()
+    base = {}
+    for i in range(0, len(fin_idx), n_slots):
+        chunk = fin_idx[i:i + n_slots]
+        uids = clean.add_requests([prompts[j] for j in chunk],
+                                  max_new_tokens=max_new)
+        clean.run_to_completion()
+        fin = clean.take_finished()
+        for j, u in zip(chunk, uids):
+            base[j] = fin[u].tokens
+    for idx, state, toks in r1["outcome"]:
+        if state == "finished":
+            assert toks == base[idx], (
+                f"request {idx} finished with divergent tokens under "
+                f"faults: {toks} vs clean {base[idx]}")
+
+    st = r1["stats"]
+    # the plan must have actually exercised the preemption/resume path —
+    # a survival claim over faults that never fired proves nothing
+    assert st["preemptions"] >= 1 and st["resumes"] >= 1, (
+        f"fault plan never preempted (preemptions={st['preemptions']}, "
+        f"resumes={st['resumes']}): scenario is vacuous, retune "
+        f"pressure_frac")
+    assert r1["retries"] >= 1, "no transient step failure was retried"
+    return {
+        "plan": FaultInjector(**injector_kw).describe(),
+        "submitted": len(r1["outcome"]),
+        "driver_steps": r1["steps"],
+        "lifecycle": st["lifecycle"],
+        "preemptions": st["preemptions"],
+        "resumes": st["resumes"],
+        "admission_rejections": st["admission_rejections"],
+        "backpressure_waits": r1["backpressure"],
+        "transient_retries": r1["retries"],
+        "finished": len(fin_idx),
+        "finished_parity": True,
+        "deterministic_replay": True,
+        "all_terminal": True,
+    }
+
+
+def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False,
+                faults_only: bool = False):
+    if faults_only:
+        # CI fault-injection smoke: lifecycle contract only, no trained
+        # model, no timing rows
+        rob = robustness_scenario(smoke=smoke)
+        results = {"smoke": smoke, "faults_only": True, "robustness": rob}
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"serve/robustness,{rob['driver_steps']},"
+              f"submitted={rob['submitted']};finished={rob['finished']};"
+              f"preemptions={rob['preemptions']};resumes={rob['resumes']};"
+              f"lifecycle={json.dumps(rob['lifecycle'])}")
+        return []
     from benchmarks.common import trained_model
 
     cfg, params, hessians = trained_model()
@@ -148,6 +311,16 @@ def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False):
                  f"steps={steps};tokens_per_step={total / steps:.2f};"
                  f"acceptance={st['acceptance_rate']:.2f}"))
 
+    rob = robustness_scenario(smoke=smoke)
+    results["robustness"] = rob
+    rows.append(("serve/robustness", float(rob["driver_steps"]),
+                 f"submitted={rob['submitted']};"
+                 f"finished={rob['finished']};"
+                 f"preemptions={rob['preemptions']};"
+                 f"resumes={rob['resumes']};"
+                 f"abandoned={rob['lifecycle']['abandoned']};"
+                 f"failed={rob['lifecycle']['failed']}"))
+
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -160,9 +333,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small request count / budgets (CI mode)")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="run ONLY the seeded fault-plan robustness "
+                         "scenario (CI fault-injection smoke: asserts "
+                         "zero hangs and every request terminal)")
     ap.add_argument("--out", default=_BENCH_JSON)
     args = ap.parse_args()
-    serve_bench(out_json=args.out, smoke=args.smoke)
+    serve_bench(out_json=args.out, smoke=args.smoke,
+                faults_only=args.inject_faults)
 
 
 if __name__ == "__main__":

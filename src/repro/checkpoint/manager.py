@@ -8,7 +8,10 @@
     (straggler mitigation: checkpoint I/O off the critical path).
   * **self-validating restore** — `latest_step()` walks checkpoints newest
     to oldest and returns the first whose manifest and checksums verify, so
-    a torn write falls back to the previous good one.
+    a torn write falls back to the previous good one; `restore()` itself
+    re-verifies every leaf's content hash against the manifest and fails
+    fast with the offending leaf path (`CheckpointCorrupt`) instead of
+    serving silently corrupted quantized planes.
   * **elastic / mesh-agnostic** — leaves are stored as host numpy arrays
     keyed by pytree path; `restore(template)` re-materializes them into any
     template (fresh device layout / different mesh), so jobs can restart on
@@ -34,6 +37,18 @@ def _leafname(path) -> str:
 
 def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A stored leaf's content hash disagrees with the manifest written at
+    save time.  ``leaf`` names the offending pytree path, so the failure
+    points at the corrupted plane instead of surfacing later as silently
+    wrong numerics."""
+
+    def __init__(self, message: str, leaf: str, step: int):
+        super().__init__(message)
+        self.leaf = leaf
+        self.step = step
 
 
 class CheckpointManager:
@@ -131,7 +146,9 @@ class CheckpointManager:
         return None
 
     def restore(self, step: int, template: Any) -> Any:
-        """Fill `template`'s leaves (by pytree path) from the checkpoint."""
+        """Fill `template`'s leaves (by pytree path) from the checkpoint,
+        verifying each leaf's content hash against the manifest first —
+        a mismatch raises ``CheckpointCorrupt`` naming the leaf path."""
         path = os.path.join(self.directory, f"step_{step:010d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
@@ -144,6 +161,14 @@ class CheckpointManager:
                 raise KeyError(f"checkpoint missing leaf {name}")
             info = manifest["leaves"][name]
             arr = z[info["key"]]
+            # the manifest CRC was taken over the STORED bytes (possibly a
+            # u8 view of an ml_dtypes array) — verify before the view back
+            if _crc(arr) != info["crc"]:
+                raise CheckpointCorrupt(
+                    f"checkpoint step {step}: stored bytes of leaf {name} "
+                    f"do not match the manifest content hash "
+                    f"(crc {_crc(arr)} != {info['crc']}) — refusing to "
+                    f"serve a corrupted plane", leaf=name, step=step)
             if str(arr.dtype) != info["dtype"]:
                 arr = arr.view(np.dtype(info["dtype"])).reshape(info["shape"])
             if hasattr(leaf, "dtype") and str(leaf.dtype) != str(arr.dtype):

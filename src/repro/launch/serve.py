@@ -8,10 +8,21 @@ Multi-device serving: ``--mesh-shape 2x4`` (or ``--dp 2 --tp 4``) builds a
 shard along N over "model" (whole (bn, bk) tile groups per shard), the
 slot cache shards over "dp".  On a single host, force device count first:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Lifecycle / robustness knobs (DESIGN.md §10): ``--queue-depth`` bounds
+the admission queue (requests beyond it see backpressure and wait in the
+launcher), ``--deadline-ms`` attaches an SLO deadline to every request
+(expired work is ABANDONED, queued or running), ``--guards`` folds the
+per-step finite check into the decode jit (non-finite rows quarantine
+only their own request), and ``--inject-faults`` drives the whole thing
+with a seeded deterministic fault plan (NaN/Inf logits, cache-pressure
+windows forcing preemption+resume, transient step failures absorbed by
+bounded retry) — the demo must end with every request terminal.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -23,7 +34,8 @@ from repro.core import APConfig, CLAQConfig, ORConfig
 from repro.data import calibration_set
 from repro.launch.quantize import claq_quantize, claq_quantize_with_draft
 from repro.models import api
-from repro.serve import ServingEngine, SpecConfig
+from repro.serve import (AdmissionRejected, FaultInjector, RetryPolicy,
+                         ServingEngine, SpecConfig, StepClock)
 
 
 def _build_mesh(args):
@@ -83,6 +95,29 @@ def main():
                          "= per-token dynamic absmax quantization folded "
                          "into the fused kernel (opt-in; changes numerics "
                          "within the documented bound, DESIGN.md §9)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="bounded admission queue depth (0 = engine "
+                         "default, 2x slots); submissions beyond it see "
+                         "typed backpressure and wait in the launcher")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request SLO deadline; expired work is "
+                         "ABANDONED (queued or running), 0 = none")
+    ap.add_argument("--guards", action="store_true",
+                    help="fold a per-step finite check into the decode "
+                         "jit; a non-finite row quarantines only its own "
+                         "request (FAILED + diagnostics)")
+    ap.add_argument("--on-pressure", choices=("preempt", "truncate"),
+                    default="preempt",
+                    help="cache-pressure policy: preempt (evict + resume "
+                         "bit-identically, default) or truncate (opt-in "
+                         "legacy behavior)")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="drive the run under a seeded deterministic "
+                         "fault plan (NaN/Inf logits, pressure windows, "
+                         "transient step failures); implies --guards and "
+                         "a virtual clock so outcomes replay exactly")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the injected fault plan")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP device mesh, e.g. 2x4 (data x model)")
     ap.add_argument("--dp", type=int, default=0,
@@ -136,30 +171,58 @@ def main():
     if mesh is not None:
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
 
+    injector = None
+    clock = None
+    if args.inject_faults:
+        # faults imply guards (NaN injection must quarantine, not poison)
+        # and a virtual clock (deadline outcomes must replay exactly)
+        injector = FaultInjector(seed=args.fault_seed)
+        clock = StepClock()
+        print(f"[serve] fault plan (seed {args.fault_seed}): "
+              f"{json.dumps(injector.describe())}")
     eng = ServingEngine(params, cfg, n_slots=args.slots,
                         max_len=args.max_len, min_bucket=args.min_bucket,
                         bucketing=not args.no_bucketing, mesh=mesh,
                         draft_params=draft_params, spec=spec,
                         draft_plan_bn=args.draft_plan_bn or None,
                         draft_plan_bk=args.draft_plan_bk or None,
-                        act_dtype=args.act_dtype)
+                        act_dtype=args.act_dtype,
+                        guards=args.guards or args.inject_faults,
+                        faults=injector,
+                        queue_depth=args.queue_depth or None,
+                        on_pressure=args.on_pressure, clock=clock)
     if args.act_dtype != "f32":
         print(f"[serve] activations: per-token {args.act_dtype} "
               f"(opt-in weight-activation quantized serving)")
     rng = np.random.default_rng(0)
     pending = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12)).tolist()
                for _ in range(args.requests)]
+    # bounded retry absorbs the injected transient step failures; under
+    # the virtual clock the backoff never wall-sleeps
+    retry = RetryPolicy(max_attempts=4,
+                        backoff_s=0.0 if injector is not None else 0.05)
     t0 = time.time()
     steps = 0
     step_tokens = 0
     t_decode = 0.0
-    while pending or eng.active:
-        if pending and eng.free:
-            batch = [pending.pop(0)
-                     for _ in range(min(len(pending), len(eng.free)))]
-            eng.add_requests(batch, max_new_tokens=args.max_new)
+    backpressure_waits = 0
+    fault_retries = 0
+    while pending or eng.active or len(eng.queue):
+        while pending:
+            try:
+                eng.submit(pending[0], max_new_tokens=args.max_new,
+                           deadline_ms=args.deadline_ms or None)
+                pending.pop(0)
+            except AdmissionRejected:
+                if not eng.active and not len(eng.queue):
+                    raise        # empty engine rejected it: will never fit
+                backpressure_waits += 1   # queue full: drain a step first
+                break
         ts = time.time()
-        emitted = eng.step()
+        emitted, retries = retry.run(eng.step)
+        fault_retries += retries
+        if clock is not None:
+            clock.advance()
         if emitted:
             steps += 1
             # speculative steps emit LISTS of accepted tokens per request;
@@ -190,6 +253,18 @@ def main():
     print(f"[serve] prefill traces {st['prefill_traces']} "
           f"(buckets {st['buckets']}), compile-cache hit rate "
           f"{st['bucket_hit_rate']:.0%}")
+    lc = st["lifecycle"]
+    nonterminal = len(eng.active) + st["queued"]
+    print(f"[serve] lifecycle: {json.dumps(lc)}, preemptions "
+          f"{st['preemptions']}, resumes {st['resumes']}, backpressure "
+          f"waits {backpressure_waits}, transient-fault retries "
+          f"{fault_retries}")
+    if nonterminal:
+        raise SystemExit(
+            f"[serve] {nonterminal} requests never reached a terminal "
+            f"state — lifecycle invariant violated")
+    if args.inject_faults:
+        print("[serve] fault plan survived: every request terminal")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,8 @@
 from .bucketing import BucketingPolicy, BucketStats  # noqa: F401
 from .engine import ServingEngine, Request  # noqa: F401
+from .faults import FaultInjector, nonfinite_rows  # noqa: F401
+from .lifecycle import (AdmissionQueue, AdmissionRejected,  # noqa: F401
+                        DeadlineExceeded, EngineFault, IncompleteRun,
+                        RequestState, RetryPolicy, StepClock,
+                        TERMINAL_STATES)
 from .speculative import SpecConfig  # noqa: F401

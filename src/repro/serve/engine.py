@@ -45,13 +45,45 @@ weight-resident: each shard dequantizes only its own N slice, so the step
 moves activations, never weights (asserted on compiled HLO in
 tests/test_dist_serving.py via ``lower_decode()``).
 
-Admission validates the cache budget: a request needs ``len(prompt) +
-max_new_tokens <= max_len`` slots (the prompt plus every generated token
-fed back through decode), otherwise decode would write past the cache end
-where the update clamps/drops — silently corrupting the last K/V
-position.  As a belt-and-braces guard (budgets mutated mid-flight,
-streaming extensions), ``step()`` retires any request whose slot cache is
-full before its budget, marking it ``truncated``.
+Request lifecycle (DESIGN.md §10, serve/lifecycle.py): every request
+carries an explicit state machine (QUEUED -> RUNNING -> {FINISHED,
+TRUNCATED, ABANDONED, FAILED, PREEMPTED}; PREEMPTED -> QUEUED) with an
+optional per-request deadline and priority.  ``submit()`` enqueues into
+a bounded admission queue and raises typed ``AdmissionRejected``
+backpressure when it is full; each ``step()`` first runs lifecycle
+housekeeping (``pump()``): deadline-expired work is ABANDONED (queued
+or running — partial tokens are kept), cache pressure is applied, and
+free slots are filled from the queue (highest priority first, resumed
+work ahead of fresh).
+
+Preemption replaces silent truncation: when the effective slot-cache
+limit drops below ``max_len`` (fault injection, ``set_cache_pressure``)
+or strictly-higher-priority work is queued behind a full engine, the
+lowest-priority/youngest victim is PREEMPTED — its slot is cleared by
+the jitted masked rollback (``_rollback_tail``, the same leaf
+classification as the bucketed masked insert) — and re-queued at the
+front.  Resume re-prefills the ORIGINAL prompt through the normal
+bucketed prefill, then replays the generated prefix through the decode
+jit teacher-forced (bitwise the decode steps the uninterrupted run
+executed — prefilling prompt+prefix would NOT be bitwise: the prefill
+path uses online softmax, decode does not), so a resumed request's
+remaining tokens are bit-identical to an uninterrupted run.  Truncation
+survives only where resume is physically impossible (fill reached
+``max_len`` itself) or as the opt-in ``on_pressure="truncate"`` policy.
+moe cannot preempt (decode rows are router-coupled, so a batch-1 replay
+is not bitwise) and falls back to truncation.
+
+Numeric guards: ``guards=True`` folds one ``jnp.isfinite`` all-reduce
+over the selected logits into the prefill/decode/verify jits; a
+non-finite row quarantines ONLY the offending request (FAILED, with
+diagnostics: phase, non-finite count, engine step) while the rest of the
+batch proceeds — mid-speculative-window the slot is rolled back, then
+quarantined.  ``faults=FaultInjector(...)`` (serve/faults.py) wires a
+seeded deterministic fault plan: NaN/Inf injection rides a traced
+operand added to the logits inside the jit (so guards see injected
+faults exactly like genuine ones), pressure windows drive preemption,
+and planned transient ``EngineFault`` raises happen BEFORE any state
+mutation so a bounded-retry driver can simply call ``step()`` again.
 
 Flow: add_requests() buckets, pads, and prefills; step() decodes every
 active slot in one batched decode_step and emits one token per active
@@ -80,12 +112,15 @@ side effect inside the jitted function runs once per trace); ``stats()``
 reports them next to the bucketing policy's compile-cache accounting.
 Speculation adds its own counters (``draft_prefill/draft_decode/verify
 _traces``) — all bounded by constants independent of how many windows
-run.
+run.  Lifecycle adds terminal-state, preemption/resume, and
+admission-rejection counters.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -99,8 +134,13 @@ from repro.kernels.plan import prepare_tree
 from repro.models import api
 from repro.models import modules as nn
 
+from . import lifecycle as lc
 from . import speculative
 from .bucketing import BucketingPolicy
+from .faults import FaultInjector, nonfinite_rows
+from .lifecycle import (AdmissionQueue, AdmissionRejected, DeadlineExceeded,
+                        EngineFault, IncompleteRun, RequestState, RetryPolicy,
+                        TERMINAL_STATES)
 from .speculative import SpecConfig
 
 Array = jax.Array
@@ -130,18 +170,34 @@ class Request:
     eos_id: Optional[int] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
-    done: bool = False
-    truncated: bool = False   # retired because the slot cache filled first
+    state: RequestState = RequestState.QUEUED
+    priority: int = 0                   # higher preempts lower under load
+    deadline: Optional[float] = None    # absolute clock() time, or None
+    submitted_at: float = 0.0
+    preemptions: int = 0                # times this request was preempted
+    diagnostics: Optional[Dict[str, Any]] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    @property
+    def truncated(self) -> bool:
+        return self.state is RequestState.TRUNCATED
+
+    def transition(self, new_state: RequestState) -> None:
+        lc.transition(self, new_state)
 
 
 def _rollback_tail(cache, new_lens):
     """Rewind every slot's fill counter to ``new_lens`` ((B,) int32) and
     zero the K/V positions at or past it — the per-slot cache rollback a
-    rejected speculation window needs.  Reuses the bucketed-insert leaf
-    classification (`_SEQ_LEAVES` / `_LEN_LEAVES` by NamedTuple field name
-    in the key path), so the rolled-back cache is bit-identical to one
+    rejected speculation window needs, and (with a victim's length set to
+    0) the masked slot CLEAR preemption needs.  Reuses the bucketed-insert
+    leaf classification (`_SEQ_LEAVES` / `_LEN_LEAVES` by NamedTuple field
+    name in the key path), so the rolled-back cache is bit-identical to one
     that never saw the rejected tail (the tail past a slot's fill is zero
-    from init / the masked insert).  Jitted once in the engine — both the
+    from init / the masked insert).  Jitted once in the engine — the
     target and the draft cache share the treedef, so one trace serves
     both; lengths arrive traced, so acceptance patterns never retrace."""
     new_lens = jnp.asarray(new_lens, jnp.int32)
@@ -210,7 +266,12 @@ class ServingEngine:
                  draft_params=None, spec: Optional[SpecConfig] = None,
                  draft_plan_bn: Optional[int] = None,
                  draft_plan_bk: Optional[int] = None,
-                 act_dtype: Optional[str] = None):
+                 act_dtype: Optional[str] = None,
+                 guards: bool = False,
+                 faults: Optional[FaultInjector] = None,
+                 queue_depth: Optional[int] = None,
+                 on_pressure: str = "preempt",
+                 clock=None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
@@ -220,6 +281,10 @@ class ServingEngine:
             raise ValueError(
                 "act_dtype='int8' needs ahead-of-time plans — drop "
                 "prepare=False (the int8 path runs on prepared leaves only)")
+        if on_pressure not in ("preempt", "truncate"):
+            raise ValueError(
+                f"on_pressure must be 'preempt' or 'truncate', got "
+                f"{on_pressure!r}")
         if draft_plan_bn is not None or draft_plan_bk is not None:
             if spec is None:
                 raise ValueError(
@@ -258,6 +323,18 @@ class ServingEngine:
         self.max_len = max_len
         self.mesh = mesh
         self.act_dtype = act_dtype
+        # ---- lifecycle / robustness knobs --------------------------------
+        self.guards = bool(guards)
+        self.faults = faults
+        self.on_pressure = on_pressure
+        self._clock = clock if clock is not None else time.monotonic
+        self._pressure_limit: Optional[int] = None
+        # moe decode rows are router-coupled: a batch-1 resume replay is
+        # not bitwise the batched decode, so moe cannot preempt and falls
+        # back to truncation under pressure.
+        self._preemptible = cfg.family != "moe"
+        self.queue = AdmissionQueue(
+            queue_depth if queue_depth is not None else max(2 * n_slots, 1))
         # Padding additionally requires linear (non-ring) caches: a
         # sliding-window ring keeps the LAST W keys, so a padded suffix
         # would evict valid ones and the masked insert's linear-position
@@ -305,14 +382,32 @@ class ServingEngine:
         self.spec_drafted = 0
         self.spec_accepted = 0
 
+        # Lifecycle counters: terminal states, preemption/resume traffic,
+        # and typed admission rejections (backpressure observed).
+        self.state_counts: collections.Counter = collections.Counter()
+        self.preemptions = 0
+        self.resumes = 0
+        self.admission_rejections = 0
+
         # act_dtype scopes the per-token int8 activation quantization of
         # every quantized matmul inside the jitted steps; QuantMode.mode /
         # .interpret stay whatever the ambient context set (the wrap runs
         # at trace time — QuantMode is read inside dense()).
-        def _decode_fn(p, t, c):
+        #
+        # The jitted steps return (logits, cache, nonfinite) — the third
+        # output is the per-row non-finite count when guards are on, None
+        # (an empty pytree node, zero cost) otherwise.  ``iv`` is the
+        # fault injector's additive per-slot vector, applied INSIDE the
+        # jit so the guard sees injected faults exactly like genuine
+        # ones; engines without an injector pass None.
+        def _decode_fn(p, t, c, iv):
             self.decode_traces += 1
             with nn.activation_quant(self.act_dtype):
-                return api.decode_step(p, cfg, t, c)
+                logits, cache = api.decode_step(p, cfg, t, c)
+            if iv is not None:
+                logits = logits + iv[:, None]
+            nf = nonfinite_rows(logits) if self.guards else None
+            return logits, cache, nf
 
         # One stable jitted prefill keyed on the (batch, bucket) operand
         # shape: admissions at a previously seen shape hit the compile
@@ -321,11 +416,18 @@ class ServingEngine:
         def _prefill_fn(p, t, c, lens):
             self.prefill_traces += 1
             with nn.activation_quant(self.act_dtype):
-                return api.prefill_step(p, cfg, {"tokens": t}, c,
-                                        logits_at=lens - 1)
+                logits, cache = api.prefill_step(p, cfg, {"tokens": t}, c,
+                                                 logits_at=lens - 1)
+            nf = nonfinite_rows(logits) if self.guards else None
+            return logits, cache, nf
 
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn)
+        # One rollback trace serves every cache with the engine's treedef
+        # (target and draft alike) and doubles as the preemption slot
+        # clear; per-slot lengths are traced, so acceptance/eviction
+        # patterns never mint compiles.
+        self._rollback = jax.jit(_rollback_tail)
 
         # -------- speculative decoding: draft model + verify + rollback --
         self.spec = spec
@@ -374,18 +476,18 @@ class ServingEngine:
                     _, cache = api.prefill_step(p, cfg, {"tokens": t}, c)
                 return cache
 
-            def _verify_fn(p, t, c):
+            def _verify_fn(p, t, c, iv):
                 self.verify_traces += 1
                 with nn.activation_quant(self.act_dtype):
-                    return api.decode_span(p, cfg, t, c)
+                    logits, cache = api.decode_span(p, cfg, t, c)
+                if iv is not None:
+                    logits = logits + iv[:, None, None]
+                nf = nonfinite_rows(logits) if self.guards else None
+                return logits, cache, nf
 
             self._draft_decode = jax.jit(_draft_decode_fn)
             self._draft_prefill = jax.jit(_draft_prefill_fn)
             self._verify = jax.jit(_verify_fn)
-            # One rollback trace serves both caches (same treedef/shapes);
-            # per-slot lengths are traced, so acceptance patterns never
-            # mint compiles.
-            self._rollback = jax.jit(_rollback_tail)
 
     @contextlib.contextmanager
     def _mesh_scope(self):
@@ -398,6 +500,17 @@ class ServingEngine:
         with self.mesh, dctx.use_mesh(self.mesh):
             yield
 
+    def _repin_cache(self):
+        """Re-pin the slot cache(s) after an eager host-side update (masked
+        insert, preemption clear) so the decode jit keeps one stable input
+        sharding; a no-op for single-device engines."""
+        if self._cache_shardings is None:
+            return
+        self.cache = jax.device_put(self.cache, self._cache_shardings)
+        if self.spec is not None:
+            self.draft_cache = jax.device_put(self.draft_cache,
+                                              self._cache_shardings)
+
     def lower_decode(self):
         """AOT-lower the decode step against the engine's CURRENT
         params/cache (sharded when a mesh is wired) — for HLO inspection:
@@ -406,48 +519,100 @@ class ServingEngine:
         so it bumps `decode_traces`."""
         toks = jnp.asarray(self.last_token, jnp.int32)
         with self._mesh_scope():
-            return self._decode.lower(self.params, toks, self.cache)
+            return self._decode.lower(self.params, toks, self.cache, None)
 
     # ------------------------------------------------------------------ admit
+    @staticmethod
+    def _fill(req: Request) -> int:
+        """Slot-cache positions this request occupies: the prompt plus one
+        K/V write per decode step so far (the pending last_token's write
+        belongs to the NEXT step)."""
+        return len(req.prompt) + len(req.tokens) - 1
+
+    def _make_request(self, prompt: Sequence[int], max_new_tokens: int,
+                      eos_id: Optional[int], priority: int,
+                      deadline_ms: Optional[float]) -> Request:
+        prompt = list(prompt)
+        if len(prompt) == 0:
+            raise AdmissionRejected("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_len:
+            # The slot cache must hold the prompt plus every generated
+            # token fed back through decode; past max_len the K/V
+            # update clamps/drops, silently corrupting the last cache
+            # position — reject at admission instead.
+            raise AdmissionRejected(
+                f"request does not fit its slot cache: {len(prompt)} "
+                f"prompt + {max_new_tokens} new tokens > max_len="
+                f"{self.max_len}; shorten the prompt, lower "
+                f"max_new_tokens, or build the engine with a larger "
+                f"max_len")
+        now = self._clock()
+        deadline = None
+        if deadline_ms is not None:
+            if deadline_ms <= 0:
+                raise DeadlineExceeded(
+                    f"deadline_ms={deadline_ms} is already expired at "
+                    f"submission")
+            deadline = now + deadline_ms / 1e3
+        req = Request(self._uid, prompt, max_new_tokens, eos_id,
+                      priority=priority, deadline=deadline, submitted_at=now)
+        self._uid += 1
+        return req
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
+        """Enqueue one request into the bounded admission queue (the
+        backpressure path — ``AdmissionRejected`` when the queue is full
+        or the request can never fit, ``DeadlineExceeded`` when its SLO
+        is already blown).  Admission into a free slot happens at the
+        next ``step()``/``pump()``; returns the uid."""
+        try:
+            req = self._make_request(prompt, max_new_tokens, eos_id,
+                                     priority, deadline_ms)
+            self.queue.push(req)
+        except AdmissionRejected:
+            self.admission_rejections += 1
+            raise
+        return req.uid
+
     def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
                     eos_id: Optional[int] = None) -> int:
         return self.add_requests([prompt], max_new_tokens, eos_id)[0]
 
     def add_requests(self, prompts: Sequence[Sequence[int]],
                      max_new_tokens: int = 16,
-                     eos_id: Optional[int] = None) -> List[int]:
-        """Admit several prompts; those sharing a length bucket are padded
-        to it and prefilled in ONE batched call.  Returns uids in prompt
-        order (look in `active`/`finished` for the Request objects — an
-        immediate EOS or a one-token budget retires at admission)."""
+                     eos_id: Optional[int] = None, priority: int = 0,
+                     deadline_ms: Optional[float] = None) -> List[int]:
+        """Admit several prompts directly into free slots (bypassing the
+        queue); those sharing a length bucket are padded to it and
+        prefilled in ONE batched call.  Returns uids in prompt order
+        (look in `active`/`finished` for the Request objects — an
+        immediate EOS or a one-token budget retires at admission).
+        Raises typed ``AdmissionRejected`` when the slots don't exist —
+        use ``submit()`` for queued, backpressured admission."""
         if len(prompts) > len(self.free):
-            raise RuntimeError(
+            raise AdmissionRejected(
                 f"need {len(prompts)} free slots, have {len(self.free)}")
+        reqs = [self._make_request(p, max_new_tokens, eos_id, priority,
+                                   deadline_ms) for p in prompts]
+        self._admit(reqs)
+        return [r.uid for r in reqs]
+
+    def _admit(self, reqs: List[Request]) -> None:
+        """Prefill-admit fresh requests into free slots, grouped by length
+        bucket (one batched prefill per group; moe one per prefill)."""
         # moe prefill rows are coupled through router capacity (a row's
         # tokens change which of another row's tokens are dropped), so moe
         # admissions run one per prefill to match per-request admission;
         # all other families' rows are independent and share a call.
         batch_safe = self.cfg.family != "moe"
         groups: Dict[Any, List[int]] = {}
-        for i, prompt in enumerate(prompts):
-            if len(prompt) == 0:
-                raise ValueError("empty prompt")
-            if len(prompt) + max_new_tokens > self.max_len:
-                # The slot cache must hold the prompt plus every generated
-                # token fed back through decode; past max_len the K/V
-                # update clamps/drops, silently corrupting the last cache
-                # position — reject at admission instead.
-                raise ValueError(
-                    f"request does not fit its slot cache: {len(prompt)} "
-                    f"prompt + {max_new_tokens} new tokens > max_len="
-                    f"{self.max_len}; shorten the prompt, lower "
-                    f"max_new_tokens, or build the engine with a larger "
-                    f"max_len")
-            bucket = self.bucketing.bucket_for(len(prompt))
+        for i, req in enumerate(reqs):
+            bucket = self.bucketing.bucket_for(len(req.prompt))
             groups.setdefault(bucket if batch_safe else (bucket, i),
                               []).append(i)
 
-        uids: List[int] = [-1] * len(prompts)
         for key, idxs in groups.items():
             bucket = key if batch_safe else key[0]
             B = len(idxs)
@@ -460,13 +625,13 @@ class ServingEngine:
             toks = np.zeros((Bb, bucket), np.int32)
             lens = np.ones((Bb,), np.int32)
             for r, i in enumerate(idxs):
-                toks[r, :len(prompts[i])] = prompts[i]
-                lens[r] = len(prompts[i])
+                toks[r, :len(reqs[i].prompt)] = reqs[i].prompt
+                lens[r] = len(reqs[i].prompt)
             self.bucketing.record(Bb, bucket)
             cache_b = api.make_cache(self.cfg, Bb, self.max_len,
                                      dtype=self._cache_dtype)
             with self._mesh_scope():
-                logits, cache_b = self._prefill(
+                logits, cache_b, nf = self._prefill(
                     self.params, jnp.asarray(toks), cache_b,
                     jnp.asarray(lens))
                 if self.spec is not None:
@@ -478,6 +643,7 @@ class ServingEngine:
                     dcache_b = self._draft_prefill(
                         self.draft_params, jnp.asarray(toks), dcache_b)
             firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            nf_h = np.asarray(nf) if nf is not None else None
             slots = [self.free.pop(0) for _ in idxs]
             self.cache = _masked_group_insert(
                 self.cache, cache_b, slots, lens[:B].tolist(),
@@ -486,33 +652,100 @@ class ServingEngine:
                 self.draft_cache = _masked_group_insert(
                     self.draft_cache, dcache_b, slots, lens[:B].tolist(),
                     self.bucketing.enabled)
-            if self._cache_shardings is not None:
-                # the eager insert mixes the sharded batched cache with the
-                # single-placement prefill fragment; re-pin so the decode
-                # jit keeps one stable input sharding
-                self.cache = jax.device_put(self.cache,
-                                            self._cache_shardings)
-                if self.spec is not None:
-                    self.draft_cache = jax.device_put(self.draft_cache,
-                                                      self._cache_shardings)
+            self._repin_cache()
             for r, i in enumerate(idxs):
-                req = Request(self._uid, list(prompts[i]), max_new_tokens,
-                              eos_id, slot=slots[r])
-                self._uid += 1
+                req = reqs[i]
+                req.slot = slots[r]
+                req.transition(RequestState.RUNNING)
                 self.active[req.uid] = req
-                self._append_token(req, int(firsts[r]))
-                uids[i] = req.uid
-        return uids
+                if nf_h is not None and nf_h[r] > 0:
+                    # genuine non-finite prompt logits: quarantine at
+                    # admission — no first token is sampled from garbage
+                    self._quarantine(req, "prefill", int(nf_h[r]))
+                else:
+                    self._append_token(req, int(firsts[r]))
 
-    def _retire(self, req: Request, truncated: bool = False) -> None:
-        """Move a request to `finished` and recycle its slot — the single
-        retirement bookkeeping for both the budget/EOS and cache-full
-        paths."""
-        req.done = True
-        req.truncated = truncated
-        self.free.append(req.slot)
-        del self.active[req.uid]
+    def _admit_resume(self, req: Request) -> None:
+        """Resume a preempted request into a free slot, bit-identically to
+        an uninterrupted run: bucketed prefill of the ORIGINAL prompt
+        (same op as its first admission), then a teacher-forced decode
+        replay of the generated prefix at batch 1 — exactly the decode
+        steps the uninterrupted run already executed, so the rebuilt slot
+        cache and every subsequent token are bitwise reproductions.
+        (Prefilling prompt+prefix instead would NOT be bitwise: the
+        prefill path reduces attention with online softmax, decode does
+        not.)  The replay reuses the engine's decode jit at a (1,) batch
+        shape — one extra trace for the engine lifetime, independent of
+        how many resumes run."""
+        P, toks = req.prompt, req.tokens
+        n = len(P)
+        fill = n + len(toks) - 1
+        bucket = self.bucketing.bucket_for(n)
+        ta = np.zeros((1, bucket), np.int32)
+        ta[0, :n] = P
+        self.bucketing.record(1, bucket)
+        n_j = jnp.asarray([n], jnp.int32)
+        # replay must stay fault-free: injection targets engine steps, and
+        # catch-up work re-executes history that already happened cleanly
+        riv = None if self.faults is None else jnp.zeros((1,), jnp.float32)
+        cache_b = api.make_cache(self.cfg, 1, self.max_len,
+                                 dtype=self._cache_dtype)
+        dcache_b = None
+        with self._mesh_scope():
+            _, cache_b, _ = self._prefill(self.params, jnp.asarray(ta),
+                                          cache_b, n_j)
+            if bucket != n:
+                # in-place equivalent of the masked insert's padding fix:
+                # zero the padded K/V tail, pin the fill counter to n
+                cache_b = self._rollback(cache_b, n_j)
+            if self.spec is not None:
+                dcache_b = api.make_cache(self.cfg, 1, self.max_len,
+                                          dtype=self._cache_dtype)
+                dcache_b = self._draft_prefill(self.draft_params,
+                                               jnp.asarray(ta), dcache_b)
+                if bucket != n:
+                    dcache_b = self._rollback(dcache_b, n_j)
+            for t in toks[:-1]:
+                tok = jnp.asarray([t], jnp.int32)
+                _, cache_b, _ = self._decode(self.params, tok, cache_b, riv)
+                if self.spec is not None:
+                    _, dcache_b = self._draft_decode(self.draft_params, tok,
+                                                     dcache_b)
+        slot = self.free.pop(0)
+        self.cache = _masked_group_insert(self.cache, cache_b, [slot],
+                                          [fill], False)
+        if self.spec is not None:
+            self.draft_cache = _masked_group_insert(
+                self.draft_cache, dcache_b, [slot], [fill], False)
+        self._repin_cache()
+        req.slot = slot
+        req.transition(RequestState.RUNNING)
+        self.active[req.uid] = req
+        self.last_token[slot] = toks[-1]
+        self.resumes += 1
+
+    # -------------------------------------------------------------- lifecycle
+    def _retire(self, req: Request, state: RequestState = RequestState.FINISHED,
+                diagnostics: Optional[Dict[str, Any]] = None) -> None:
+        """Move a request (active or queued) to `finished` in a terminal
+        state and recycle its slot — the single retirement bookkeeping for
+        budget/EOS, truncation, abandonment, and quarantine."""
+        if diagnostics is not None:
+            req.diagnostics = diagnostics
+        req.transition(state)
+        if req.slot >= 0:
+            self.free.append(req.slot)
+            req.slot = -1
+        self.active.pop(req.uid, None)
         self.finished[req.uid] = req
+        self.state_counts[state.value] += 1
+
+    def _quarantine(self, req: Request, phase: str, count: int) -> None:
+        """Numeric-guard quarantine: FAIL only the offending request, with
+        diagnostics, while the rest of the batch proceeds."""
+        self._retire(req, RequestState.FAILED, diagnostics={
+            "kind": "nonfinite_logits", "phase": phase,
+            "nonfinite": count, "engine_step": self.engine_steps})
 
     def _append_token(self, req: Request, t: int) -> None:
         """Append a sampled token and apply retirement — the single place
@@ -522,43 +755,201 @@ class ServingEngine:
         self.last_token[req.slot] = t
         if (len(req.tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and t == req.eos_id)):
-            self._retire(req)
+            self._retire(req, RequestState.FINISHED)
+
+    def set_cache_pressure(self, limit: Optional[int]) -> None:
+        """Manually force an effective slot-cache limit below ``max_len``
+        (None releases it).  Requests whose fill reaches the limit are
+        preempted (or truncated under ``on_pressure="truncate"``) at the
+        next step; the fault injector applies the same mechanism from its
+        seeded pressure windows."""
+        if limit is not None and limit < 2:
+            raise ValueError(f"pressure limit must be >= 2, got {limit}")
+        self._pressure_limit = limit
+
+    def _effective_limit(self, step_idx: int) -> int:
+        limit = self.max_len
+        if self._pressure_limit is not None:
+            limit = min(limit, self._pressure_limit)
+        if self.faults is not None:
+            fp = self.faults.pressure(step_idx, self.max_len)
+            if fp is not None:
+                limit = min(limit, fp)
+        return limit
+
+    def _victim_order(self) -> List[Request]:
+        """Preemption order: lowest priority first, youngest (largest uid)
+        within a priority — the cheapest work to redo."""
+        return sorted(self.active.values(),
+                      key=lambda r: (r.priority, -r.uid))
+
+    def _preempt(self, victims: List[Request], reason: str) -> None:
+        """Evict ``victims`` from their slots and re-queue them (front,
+        bound-exempt) for a bit-identical resume.  The freed slots are
+        cleared with ONE jitted masked rollback — victim lengths pinned to
+        0 (K/V zeroed, fill rewound), surviving slots pinned at their true
+        fill (a no-op for them) — reusing `_rollback_tail`'s leaf
+        classification, so a recycled slot is indistinguishable from a
+        never-used one."""
+        for req in victims:
+            req.transition(RequestState.PREEMPTED)
+            req.preemptions += 1
+            self.preemptions += 1
+            del self.active[req.uid]
+            self.free.append(req.slot)
+            req.slot = -1
+        lens = np.zeros((self.n_slots,), np.int32)
+        for r in self.active.values():
+            lens[r.slot] = self._fill(r)
+        lens_j = jnp.asarray(lens)
+        with self._mesh_scope():
+            self.cache = self._rollback(self.cache, lens_j)
+            if self.spec is not None:
+                self.draft_cache = self._rollback(self.draft_cache, lens_j)
+        self._repin_cache()
+        for req in victims:
+            req.transition(RequestState.QUEUED)
+            self.queue.push_front(req)
+
+    def _admissible(self, req: Request, limit: int) -> bool:
+        """A queued request may take a slot only if its (prospective) fill
+        sits below the effective cache limit — admitting it under pressure
+        would just preempt it right back (admission churn)."""
+        fill = len(req.prompt) + max(len(req.tokens), 1) - 1
+        return fill < limit
+
+    def pump(self) -> None:
+        """Lifecycle housekeeping without decoding: abandon deadline-expired
+        work (queued AND running — partial tokens are kept), apply cache
+        pressure (preempt, or truncate under the opt-in policy), then fill
+        free slots from the queue — resumed work first, then fresh work,
+        highest priority first; strictly-higher-priority queued work may
+        preempt the lowest-priority/youngest running victim.  ``step()``
+        calls this first, so a driver that only ever calls ``step()``
+        still drives every request to a terminal state."""
+        step_idx = self.engine_steps
+        now = self._clock()
+        for req in list(self.active.values()):
+            if req.deadline is not None and now >= req.deadline:
+                self._retire(req, RequestState.ABANDONED, diagnostics={
+                    "kind": "deadline", "where": "running",
+                    "engine_step": step_idx})
+        limit = self._effective_limit(step_idx)
+        victims: List[Request] = []
+        for req in self._victim_order():
+            fill = self._fill(req)
+            if fill >= self.max_len:
+                # the slot cache is genuinely full before the budget
+                # (mutated mid-flight): resume is physically impossible
+                # (the replayed prefix itself would not fit), so this is
+                # terminal truncation regardless of policy
+                self._retire(req, RequestState.TRUNCATED)
+            elif fill >= limit:
+                if self.on_pressure == "preempt" and self._preemptible:
+                    victims.append(req)
+                else:
+                    self._retire(req, RequestState.TRUNCATED, diagnostics={
+                        "kind": "cache_pressure", "limit": limit,
+                        "engine_step": step_idx})
+        if victims:
+            self._preempt(victims, reason="cache_pressure")
+        self._pump_queue(now, limit)
+
+    def _pump_queue(self, now: float, limit: int) -> None:
+        # deadline-based abandonment of queued work
+        for req in self.queue.expire(now):
+            self._retire(req, RequestState.ABANDONED, diagnostics={
+                "kind": "deadline", "where": "queued",
+                "engine_step": self.engine_steps})
+        # strictly-higher-priority queued work evicts the lowest-priority/
+        # youngest running request when no slot is free
+        while (len(self.queue) and not self.free and self._preemptible
+               and self.on_pressure == "preempt"):
+            best = self.queue.peek_best(lambda r: self._admissible(r, limit))
+            victims = self._victim_order()
+            if (best is None or not victims
+                    or best.priority <= victims[0].priority):
+                break
+            self._preempt([victims[0]], reason="priority")
+        # admit: resumed requests one by one (each replays its own prefix),
+        # fresh requests collected and admitted in one bucketed batch
+        fresh: List[Request] = []
+        while len(self.free) - len(fresh) > 0:
+            req = self.queue.pop_best(lambda r: self._admissible(r, limit))
+            if req is None:
+                break
+            if req.tokens:
+                self._admit_resume(req)
+            else:
+                fresh.append(req)
+        if fresh:
+            self._admit(fresh)
+
+    def _tick(self) -> None:
+        """Per-step lifecycle prologue.  A planned transient fault raises
+        BEFORE any state mutation, so a driver's retry of ``step()`` is
+        idempotent."""
+        if (self.faults is not None
+                and self.faults.should_fail_step(self.engine_steps)):
+            raise EngineFault(
+                f"injected transient step failure at engine step "
+                f"{self.engine_steps}", transient=True, diagnostics={
+                    "kind": "transient_step_failure",
+                    "engine_step": self.engine_steps})
+        self.pump()
+
+    def _inject_vec(self):
+        """The fault injector's additive per-slot logit vector for this
+        step (zeros outside planned faults), or None when no injector is
+        wired — the jit signature is stable per engine configuration."""
+        if self.faults is None:
+            return None
+        occupied = sorted(r.slot for r in self.active.values())
+        return jnp.asarray(self.faults.inject_vector(
+            self.engine_steps, self.n_slots, occupied))
 
     # ------------------------------------------------------------------- step
-    def _retire_cache_full(self) -> None:
-        """Retire (truncated) any active request whose slot cache is full
-        before its token budget.  Admission validation makes this
-        unreachable for well-formed requests; it guards budgets mutated
-        mid-flight (streaming extensions) so a full cache retires the
-        request instead of decode silently overwriting the last K/V
-        position.  The slot holds len(prompt) prefill positions plus one
-        write per decode step (len(tokens) - 1 so far; the prefill-sampled
-        first token is written by the first decode step)."""
-        for req in list(self.active.values()):
-            if len(req.prompt) + len(req.tokens) - 1 >= self.max_len:
-                self._retire(req, truncated=True)
-
     def step(self) -> Dict[int, Any]:
         """One engine step for all active slots.
+
+        Runs the lifecycle prologue first (deadlines, cache pressure,
+        queue admission — see ``pump()``); a planned transient fault
+        raises ``EngineFault(transient=True)`` before any mutation.
 
         Vanilla: one batched decode, returns ``{uid: new_token}``.  With
         speculation (``spec=``): one propose/verify/rollback window,
         returns ``{uid: [tokens]}`` — between 1 and gamma+1 tokens per
         still-active request, every one of them exactly what vanilla
         greedy decode would have emitted (greedy speculation is
-        lossless)."""
+        lossless).  Quarantined (guard-failed) requests emit nothing and
+        are absent from the returned dict — drain them via
+        ``take_finished()``."""
+        self._tick()
+        if not self.active:
+            if len(self.queue):
+                # idle step with pending work: step-indexed fault plans
+                # (pressure windows, planned failures) must still elapse,
+                # or queued-but-inadmissible work would livelock
+                self.engine_steps += 1
+            return {}
         if self.spec is not None:
             return self._spec_step()
-        self._retire_cache_full()
-        if not self.active:
-            return {}
         toks = jnp.asarray(self.last_token, jnp.int32)
+        iv = self._inject_vec()
         with self._mesh_scope():
-            logits, self.cache = self._decode(self.params, toks, self.cache)
+            logits, self.cache, nf = self._decode(self.params, toks,
+                                                  self.cache, iv)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        nf_h = np.asarray(nf) if nf is not None else None
         emitted = {}
         for uid, req in list(self.active.items()):
-            t = int(nxt[req.slot])
+            s = req.slot
+            if nf_h is not None and nf_h[s] > 0:
+                # non-finite row: quarantine ONLY this request; the other
+                # rows of the same batched decode are unaffected
+                self._quarantine(req, "decode", int(nf_h[s]))
+                continue
+            t = int(nxt[s])
             emitted[uid] = t
             self._append_token(req, t)
         self.engine_steps += 1
@@ -572,18 +963,19 @@ class ServingEngine:
         rollback of both caches to fill+accepted.  Retirement (EOS /
         max_new_tokens / cache-full) applies token by token in emission
         order, so a request retires at exactly the token vanilla decode
-        would have retired it at."""
-        self._retire_cache_full()
+        would have retired it at.  A non-finite verify row (guards on)
+        emits nothing: the slot rolls back to empty and the request is
+        quarantined — rollback, then quarantine."""
         if not self.active:
             return {}
         gamma = self.spec.gamma
         # per-slot fill BEFORE the window: prompt + appended tokens minus
         # the pending last_token (whose K/V the window itself writes)
-        base_fill = {uid: len(r.prompt) + len(r.tokens) - 1
-                     for uid, r in self.active.items()}
+        base_fill = {uid: self._fill(r) for uid, r in self.active.items()}
 
         cur = jnp.asarray(self.last_token, jnp.int32)
         d_cols = []                                     # device-resident
+        iv = self._inject_vec()
         with self._mesh_scope():
             for j in range(gamma):
                 dlogits, self.draft_cache = self._draft_decode(
@@ -600,23 +992,31 @@ class ServingEngine:
             span = jnp.concatenate(
                 [jnp.asarray(self.last_token, jnp.int32)[:, None],
                  drafts_j], axis=1)                     # (n_slots, γ+1)
-            vlogits, self.cache = self._verify(self.params, span, self.cache)
+            vlogits, self.cache, nf = self._verify(self.params, span,
+                                                   self.cache, iv)
         drafts = np.asarray(drafts_j)
         greedy = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
+        nf_h = np.asarray(nf) if nf is not None else None
 
         emitted: Dict[int, List[int]] = {}
         lens = np.zeros((self.n_slots,), np.int32)   # 0 = free/retired slot
         for uid, req in list(self.active.items()):
             s = req.slot
+            if nf_h is not None and nf_h[s] > 0:
+                # mid-window quarantine: no token from this window can be
+                # trusted, so emit nothing; lens[s]=0 makes the rollback
+                # below clear the slot entirely before it is recycled
+                self._quarantine(req, "verify", int(nf_h[s]))
+                lens[s] = 0
+                continue
             k, toks = speculative.accept_greedy(drafts[s], greedy[s])
             appended: List[int] = []
             for t in toks:
-                if len(req.prompt) + len(req.tokens) - 1 >= self.max_len:
-                    # same check as _retire_cache_full, applied mid-window:
+                if self._fill(req) >= self.max_len:
                     # the slot cache is full before the budget (mutated
                     # mid-flight) — later span rows fall past the cache
                     # end, so stop at exactly the token vanilla would
-                    self._retire(req, truncated=True)
+                    self._retire(req, RequestState.TRUNCATED)
                     break
                 self._append_token(req, t)
                 appended.append(t)
@@ -633,28 +1033,52 @@ class ServingEngine:
         with self._mesh_scope():
             self.cache = self._rollback(self.cache, lens_j)
             self.draft_cache = self._rollback(self.draft_cache, lens_j)
-        if self._cache_shardings is not None:
-            self.cache = jax.device_put(self.cache, self._cache_shardings)
-            self.draft_cache = jax.device_put(self.draft_cache,
-                                              self._cache_shardings)
+        self._repin_cache()
         return emitted
 
-    def run_to_completion(self, max_steps: int = 256,
-                          strict: bool = True) -> List[int]:
-        """Decode until every active request retires.  Returns the uids
-        still active when max_steps runs out ([] == all finished); with
-        strict=True (default) exhausting max_steps raises instead, so a
-        truncated run cannot be mistaken for completion."""
-        for _ in range(max_steps):
-            if not self.active:
+    def run_to_completion(self, max_steps: int = 256, strict: bool = True,
+                          retry: Optional[RetryPolicy] = None) -> List[int]:
+        """Step until every submitted request reaches a terminal state
+        (the queue drains through ``pump()`` inside ``step()``).  Returns
+        the uids still in flight when max_steps runs out ([] == all
+        finished); with strict=True (default) exhausting max_steps raises
+        ``IncompleteRun`` carrying the partial outputs and lifecycle
+        states of every unfinished request, so a truncated run cannot be
+        mistaken for completion AND already-generated work survives the
+        error.  ``retry=RetryPolicy(...)`` absorbs transient
+        ``EngineFault``s (bounded attempts, backoff); without it they
+        propagate."""
+        consecutive_faults = 0
+        steps = 0
+        while steps < max_steps:
+            if not self.active and not len(self.queue):
                 return []
-            self.step()
-        unfinished = sorted(self.active)
+            try:
+                self.step()
+            except EngineFault as e:
+                if retry is None or not e.transient:
+                    raise
+                consecutive_faults += 1
+                if consecutive_faults >= retry.max_attempts:
+                    raise
+                backoff = (retry.backoff_s
+                           * retry.multiplier ** (consecutive_faults - 1))
+                if backoff > 0:
+                    retry.sleep(backoff)
+                continue
+            consecutive_faults = 0
+            steps += 1
+        unfinished = sorted(set(self.active) | set(self.queue.uids()))
         if unfinished and strict:
-            raise RuntimeError(
+            reqs = dict(self.active)
+            reqs.update({r.uid: r for r in self.queue.requests()})
+            raise IncompleteRun(
                 f"run_to_completion: max_steps={max_steps} exhausted with "
-                f"{len(unfinished)} requests still active (uids "
-                f"{unfinished})")
+                f"{len(unfinished)} requests not terminal (uids "
+                f"{unfinished}); partial outputs and lifecycle states "
+                f"attached to this error",
+                partial={u: list(reqs[u].tokens) for u in unfinished},
+                states={u: reqs[u].state for u in unfinished})
         return unfinished
 
     # ------------------------------------------------------------------ stats
@@ -680,6 +1104,17 @@ class ServingEngine:
             "engine_steps": self.engine_steps,
             "tokens_per_step": (self.emitted_tokens / self.engine_steps
                                 if self.engine_steps else 0.0),
+            # lifecycle: queue + terminal-state + preemption accounting
+            "queued": len(self.queue),
+            "queue_depth": self.queue.depth,
+            "guards": self.guards,
+            "on_pressure": self.on_pressure,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "admission_rejections": self.admission_rejections,
+            "lifecycle": {st.value: self.state_counts.get(st.value, 0)
+                          for st in sorted(TERMINAL_STATES,
+                                           key=lambda s: s.value)},
         }
         if self.spec is not None:
             out.update({

@@ -24,6 +24,14 @@ Window protocol (γ = SpecConfig.gamma, per engine step):
   rollback  both caches rewind to fill + accepted (masked K/V tail
             zeroing + fill-counter rewind, `engine._rollback_tail`).
 
+Quarantine inside a window (engine ``guards=True``): a non-finite verify
+row means NO token of that window can be trusted for that slot — the
+accept phase is skipped for the row, its rollback length is set to 0 (the
+slot is cleared, not rewound), and the request is retired FAILED with
+diagnostics; the other rows of the same window accept and roll back
+normally.  Rollback first, then quarantine — the cleared slot is
+indistinguishable from a free one when it is recycled.
+
 Every phase has a FIXED operand shape — (n_slots,) draft steps,
 (n_slots, γ+1) verify, whole-cache rollback with traced lengths — so
 speculation adds a constant number of XLA traces (draft decode, verify,

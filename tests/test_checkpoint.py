@@ -1,0 +1,85 @@
+"""Checkpoint integrity: the per-leaf content-hash manifest must be
+verified on RESTORE, failing fast with the offending leaf path — a
+silently corrupted quantized plane served to the engine is the storage
+flank of the robustness contract (DESIGN.md §10)."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointCorrupt, CheckpointManager
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@dataclasses.dataclass
+class State:
+    w: jnp.ndarray
+    b: jnp.ndarray
+    step: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(State, ["w", "b", "step"], [])
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return State(w=jax.random.normal(k, (8, 16), jnp.bfloat16),
+                 b=jnp.arange(16, dtype=jnp.float32),
+                 step=jnp.asarray(3, jnp.int32))
+
+
+def test_roundtrip_verifies_and_restores(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state()
+    mgr.save(7, st)
+    assert mgr.latest_step() == 7
+    out = mgr.restore(7, jax.tree_util.tree_map(jnp.zeros_like, st))
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupted_leaf_fails_fast_with_path(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state()
+    mgr.save(1, st)
+    # flip bytes of one stored leaf, keeping the manifest intact —
+    # exactly the silent corruption restore() must refuse to serve
+    ckpt = os.path.join(str(tmp_path), f"step_{1:010d}")
+    with np.load(os.path.join(ckpt, "arrays.npz")) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    with open(os.path.join(ckpt, "manifest.json")) as f:
+        manifest = json.load(f)
+    victim = manifest["leaves"][".w"]["key"]
+    arrays[victim].reshape(-1)[0] ^= 0xFF
+    np.savez(os.path.join(ckpt, "arrays.npz"), **arrays)
+    with pytest.raises(CheckpointCorrupt, match=r"\.w") as ei:
+        mgr.restore(1, jax.tree_util.tree_map(jnp.zeros_like, st))
+    assert ei.value.leaf == ".w" and ei.value.step == 1
+    # the torn checkpoint is also invisible to latest_step()
+    assert mgr.latest_step() is None
+
+
+def test_latest_step_falls_back_past_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(seed=1))
+    mgr.save(2, _state(seed=2))
+    ckpt = os.path.join(str(tmp_path), f"step_{2:010d}")
+    with np.load(os.path.join(ckpt, "arrays.npz")) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    next(iter(arrays.values())).reshape(-1)[:4] ^= 0xFF
+    np.savez(os.path.join(ckpt, "arrays.npz"), **arrays)
+    assert mgr.latest_step() == 1                # newest valid, not newest
+    step, out = mgr.restore_latest(
+        jax.tree_util.tree_map(jnp.zeros_like, _state()))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out.b),
+                                  np.asarray(_state(seed=1).b))
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore(2, jax.tree_util.tree_map(jnp.zeros_like, _state()))

@@ -41,6 +41,48 @@ def test_trivial_mesh_engine_matches_no_mesh():
     assert engm.stats()["mesh"] == {"data": 1, "model": 1}
 
 
+def test_mesh_preempt_resume_parity_and_cache_pinning():
+    """Preemption on a mesh-wired engine: the jitted slot clear and the
+    resume insert must leave the sharded cache PINNED to the engine's
+    NamedShardings (no placement drift into the decode jit), and resumed
+    requests must emit tokens bit-identical to the no-mesh engine."""
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=64,
+                              n_layers=1)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[1, 2, 3], [5, 6, 7, 8, 9]]
+    eng0 = ServingEngine(params, cfg, n_slots=2, max_len=32, min_bucket=8)
+    uids0 = eng0.add_requests(prompts, max_new_tokens=8)
+    eng0.run_to_completion()
+    fin0 = eng0.take_finished()
+    base = [fin0[u].tokens for u in uids0]
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=32, min_bucket=8,
+                        mesh=mesh)
+    uids = eng.add_requests(prompts, max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    eng.set_cache_pressure(4)                   # below both fills: preempt
+    eng.step()
+    assert eng.stats()["preemptions"] == 2 and not eng.active
+
+    def assert_pinned():
+        flat = jax.tree_util.tree_flatten_with_path(eng.cache)[0]
+        want = jax.tree_util.tree_flatten_with_path(eng._cache_shardings)[0]
+        for (p, leaf), (_, sh) in zip(flat, want):
+            assert leaf.sharding.is_equivalent_to(sh, leaf.ndim), p
+
+    assert_pinned()                             # after the jitted clear
+    eng.set_cache_pressure(None)
+    eng.step()                                  # resume both
+    assert eng.stats()["resumes"] == 2
+    assert_pinned()                             # after the resume insert
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    assert [fin[u].tokens for u in uids] == base
+    assert all(fin[u].preemptions == 1 for u in uids)
+
+
 def test_sharded_speculative_token_parity(subproc):
     """Self-speculative decoding on a 2x4 mesh: the draft/target pair
     (quantized from ONE calibration pass) served with propose/verify/
@@ -171,6 +213,25 @@ jax.tree_util.tree_map(
     visit, eng2.params,
     is_leaf=lambda l: isinstance(l, PreparedQuantizedTensor))
 assert sharded_plane_bytes, "no quantized unit sharded -> vacuous check"
+
+# --- preemption on the real 2x4 mesh: the jitted slot clear and the ----
+# --- batch-1 resume replay must preserve bitwise token parity ----------
+eng3 = ServingEngine(qparams, cfg, n_slots=4, max_len=64, min_bucket=8,
+                     plan_bn=32, mesh=mesh)
+uids3 = eng3.add_requests(wave1, max_new_tokens=6)
+for _ in range(2):
+    eng3.step()
+eng3.set_cache_pressure(4)          # every fill >= 4 now -> all preempt
+eng3.step()
+st3 = eng3.stats()
+assert st3["preemptions"] == 4 and not eng3.active, st3["preemptions"]
+eng3.set_cache_pressure(None)
+eng3.run_to_completion()
+fin3 = eng3.take_finished()
+t3 = [fin3[u].tokens for u in uids3]
+assert t3 == t1[:4], (t3, t1[:4])
+assert eng3.stats()["resumes"] == 4
+print("mesh preemption parity OK: 4 preempted, 4 resumed, bitwise tokens")
 
 txt = eng2.lower_decode().compile().as_text()
 res = analyze_hlo(txt)

@@ -1,0 +1,354 @@
+"""Request lifecycle: state machine, bounded admission, deadlines,
+preemption/resume parity, numeric-guard quarantine, fault-plan replay.
+
+The robustness contract under test (DESIGN.md §10): every request ends in
+a terminal state; backpressure and SLO misses are TYPED outcomes, not
+bugs; preempted requests resume with bitwise-identical tokens (resume =
+bucketed prefill of the original prompt + teacher-forced decode replay of
+the generated prefix, NOT a prompt+prefix prefill — online-softmax
+prefill is only ≈-equal to decode); guards quarantine exactly the
+offending batch row; and a seeded fault plan replays exactly.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import api
+from repro.serve import (AdmissionQueue, AdmissionRejected, DeadlineExceeded,
+                         EngineFault, FaultInjector, IncompleteRun, Request,
+                         RequestState, RetryPolicy, ServingEngine, StepClock,
+                         TERMINAL_STATES)
+from repro.serve.lifecycle import transition
+
+jax.config.update("jax_platform_name", "cpu")
+
+PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9]]
+
+
+@pytest.fixture(scope="module")
+def fp_model():
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=64,
+                              n_layers=1)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(fp_model, **kw):
+    cfg, params = fp_model
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("min_bucket", 8)
+    return ServingEngine(params, cfg, **kw)
+
+
+def _vanilla_tokens(fp_model, prompts, max_new, **kw):
+    eng = _engine(fp_model, **kw)
+    uids = eng.add_requests(prompts, max_new_tokens=max_new)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    return [fin[u].tokens for u in uids]
+
+
+# ------------------------------------------------------------------- units
+
+def test_state_machine_enforced():
+    req = Request(0, [1], 4)
+    assert req.state is RequestState.QUEUED and not req.done
+    transition(req, RequestState.RUNNING)
+    transition(req, RequestState.PREEMPTED)
+    transition(req, RequestState.QUEUED)
+    transition(req, RequestState.RUNNING)
+    transition(req, RequestState.FINISHED)
+    assert req.done and not req.truncated
+    # terminal states are absorbing; skipping RUNNING is illegal
+    with pytest.raises(ValueError, match="illegal lifecycle transition"):
+        transition(req, RequestState.QUEUED)
+    fresh = Request(1, [1], 4)
+    with pytest.raises(ValueError, match="illegal"):
+        transition(fresh, RequestState.PREEMPTED)
+    assert all(s in TERMINAL_STATES
+               for s in (RequestState.FINISHED, RequestState.TRUNCATED,
+                         RequestState.ABANDONED, RequestState.FAILED))
+    assert RequestState.PREEMPTED not in TERMINAL_STATES
+
+
+def test_admission_queue_bound_priority_and_expiry():
+    q = AdmissionQueue(2)
+    a = Request(0, [1], 4, priority=0)
+    b = Request(1, [1], 4, priority=5)
+    q.push(a)
+    q.push(b)
+    with pytest.raises(AdmissionRejected, match="queue full"):
+        q.push(Request(2, [1], 4))
+    assert len(q) == 2 and q.uids() == [1, 0]     # priority first
+    # preempted work re-queues at the FRONT, exempt from the bound
+    c = Request(3, [1], 4, priority=5)
+    q.push_front(c)
+    assert q.peek_best().uid == 3
+    assert q.pop_best().uid == 3 and len(q) == 2
+    # admissibility filter skips rows without dropping them
+    assert q.pop_best(lambda r: r.priority == 0).uid == 0
+    assert q.uids() == [1]
+    # deadline expiry removes and returns the expired rows
+    b.deadline = 1.0
+    assert [r.uid for r in q.expire(2.0)] == [1]
+    assert len(q) == 0 and q.pop_best() is None
+
+
+def test_retry_policy_bounds_transient_faults():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise EngineFault("flaky", transient=True)
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=3, backoff_s=0.0, sleep=lambda s: None)
+    out, retries = pol.run(flaky)
+    assert out == "ok" and retries == 2
+    # non-transient faults pass straight through
+    with pytest.raises(EngineFault, match="hard"):
+        pol.run(lambda: (_ for _ in ()).throw(EngineFault("hard")))
+    # exhausted budget re-raises the transient fault
+    with pytest.raises(EngineFault, match="always"):
+        pol.run(lambda: (_ for _ in ()).throw(
+            EngineFault("always", transient=True)))
+
+
+def test_fault_injector_plan_is_deterministic():
+    a, b = FaultInjector(seed=7), FaultInjector(seed=7)
+    assert a.describe() == b.describe()
+    assert a.logit_faults == b.logit_faults
+    assert a.pressure_spans == b.pressure_spans
+    assert a.fail_steps == b.fail_steps
+    assert a.arrival_counts == b.arrival_counts
+    assert FaultInjector(seed=8).describe() != a.describe()
+    # attempt counters are the only mutable state; reset() rewinds them
+    step = next(iter(a.fail_steps))
+    seq = [a.should_fail_step(step) for _ in range(4)]
+    a.reset()
+    assert [a.should_fail_step(step) for _ in range(4)] == seq
+    assert seq[-1] is False        # bounded: eventually passes
+    v = a.inject_vector(next(iter(a.logit_faults)), 4, occupied=[1, 2])
+    assert v.shape == (4,) and not np.isfinite(v).all()
+    assert np.isfinite(v[[0, 3]]).all()           # only occupied slots hit
+
+
+# ---------------------------------------------------------- engine lifecycle
+
+def test_step_with_zero_active_slots(fp_model):
+    eng = _engine(fp_model)
+    assert eng.step() == {}
+    assert eng.step() == {}                       # repeatable, no state drift
+    assert eng.engine_steps == 0                  # truly idle: no queue
+    uid = eng.submit(PROMPTS[0], max_new_tokens=2)
+    eng.step()                                    # pump admits + decodes
+    eng.step()
+    assert eng.take_finished()[uid].state is RequestState.FINISHED
+
+
+def test_typed_admission_errors(fp_model):
+    eng = _engine(fp_model, queue_depth=1)
+    # direct admission beyond free slots: typed, and still a ValueError
+    with pytest.raises(AdmissionRejected):
+        eng.add_requests([[1]] * 3, max_new_tokens=2)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.add_request(list(range(1, 31)), max_new_tokens=8)
+    # queue backpressure at the bound
+    eng.submit(PROMPTS[0], max_new_tokens=2)
+    with pytest.raises(AdmissionRejected, match="backpressure"):
+        eng.submit(PROMPTS[1], max_new_tokens=2)
+    assert eng.stats()["admission_rejections"] >= 1
+    # an already-blown SLO is its own outcome
+    with pytest.raises(DeadlineExceeded):
+        eng.submit(PROMPTS[1], max_new_tokens=2, deadline_ms=0)
+
+
+def test_deadline_abandonment_queued_and_running(fp_model):
+    clock = StepClock(step_ms=10.0)
+    eng = _engine(fp_model, n_slots=1, clock=clock)
+    # occupy the only slot, then queue a request with a tight deadline
+    blocker = eng.submit([2, 3, 4], max_new_tokens=12)
+    eng.step()
+    queued = eng.submit(PROMPTS[0], max_new_tokens=4, deadline_ms=25)
+    clock.advance(30)
+    eng.step()
+    fin = eng.take_finished()
+    assert fin[queued].state is RequestState.ABANDONED
+    assert fin[queued].diagnostics["where"] == "queued"
+    assert fin[queued].tokens == []               # never ran
+    assert blocker in eng.active                  # no deadline: unaffected
+    # running-side abandonment keeps the partial tokens
+    running = eng.submit([7, 8], max_new_tokens=10, deadline_ms=40)
+    eng.step()                                    # still blocked: queued
+    clock.advance(5)
+    for _ in range(11):                           # blocker retires, admits
+        eng.step()
+    assert running in eng.active
+    clock.advance(50)
+    eng.step()
+    fin = eng.take_finished()
+    assert fin[running].state is RequestState.ABANDONED
+    assert fin[running].diagnostics["where"] == "running"
+    assert len(fin[running].tokens) >= 1          # partial output survives
+
+
+def test_preempt_resume_token_parity(fp_model):
+    base = _vanilla_tokens(fp_model, PROMPTS, max_new=8)
+    eng = _engine(fp_model)
+    uids = eng.add_requests(PROMPTS, max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    eng.set_cache_pressure(4)                     # below both fills
+    eng.step()
+    st = eng.stats()
+    assert st["preemptions"] == 2 and not eng.active and st["queued"] == 2
+    for u in uids:
+        assert u not in eng.finished              # preempted, NOT terminal
+    # under sustained pressure nothing re-admits (no admission churn)
+    eng.step()
+    assert eng.stats()["preemptions"] == 2 and not eng.active
+    eng.set_cache_pressure(None)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    assert [fin[u].tokens for u in uids] == base  # bitwise resume
+    assert all(fin[u].state is RequestState.FINISHED for u in uids)
+    assert all(fin[u].preemptions == 1 for u in uids)
+    st = eng.stats()
+    assert st["resumes"] == 2
+    assert st["lifecycle"]["finished"] == 2
+    assert st["lifecycle"]["truncated"] == 0
+
+
+def test_priority_preemption_and_victim_order(fp_model):
+    base_low = _vanilla_tokens(fp_model, [PROMPTS[0]], max_new=8)[0]
+    eng = _engine(fp_model, n_slots=1)
+    low = eng.add_requests([PROMPTS[0]], max_new_tokens=8, priority=0)[0]
+    eng.step()
+    hi = eng.submit([9, 9, 9], max_new_tokens=6, priority=5)
+    eng.step()                                    # pump: hi evicts low
+    assert hi in eng.active and low not in eng.active
+    assert eng.active[hi].priority == 5
+    assert eng.stats()["preemptions"] == 1
+    # equal priority does NOT preempt
+    eq = eng.submit([4, 4], max_new_tokens=2, priority=5)
+    eng.step()
+    assert hi in eng.active and eq not in eng.active
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    assert fin[low].tokens == base_low            # resumed bit-identically
+    assert all(fin[u].state is RequestState.FINISHED
+               for u in (low, hi, eq))
+
+
+def test_on_pressure_truncate_is_opt_in(fp_model):
+    eng = _engine(fp_model, on_pressure="truncate")
+    uids = eng.add_requests(PROMPTS, max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    eng.set_cache_pressure(4)
+    eng.step()
+    fin = eng.take_finished()
+    assert all(fin[u].state is RequestState.TRUNCATED for u in uids)
+    assert all(fin[u].diagnostics["kind"] == "cache_pressure" for u in uids)
+    assert eng.stats()["preemptions"] == 0
+    with pytest.raises(ValueError, match="on_pressure"):
+        _engine(fp_model, on_pressure="panic")
+
+
+def test_incomplete_run_attaches_partials(fp_model):
+    eng = _engine(fp_model)
+    uids = eng.add_requests(PROMPTS, max_new_tokens=25, eos_id=None)
+    with pytest.raises(IncompleteRun, match="max_steps") as ei:
+        eng.run_to_completion(max_steps=3)
+    err = ei.value
+    assert sorted(err.partial) == sorted(uids)
+    for u in uids:
+        # 1 admission token + 3 decode steps, preserved on the error
+        assert err.partial[u] == eng.active[u].tokens and len(
+            err.partial[u]) == 4
+        assert err.states[u] is RequestState.RUNNING
+    assert isinstance(err, RuntimeError)          # pre-lifecycle contract
+    # non-strict keeps returning the unfinished uids
+    assert eng.run_to_completion(max_steps=1, strict=False) == sorted(uids)
+
+
+def test_guards_quarantine_only_offending_row(fp_model):
+    # a NaN injected into ONE slot's logits mid-decode must FAIL exactly
+    # that request; the other row of the same batched decode finishes
+    # with tokens bit-identical to a fault-free engine
+    inj = FaultInjector(seed=2, horizon=8, nan_faults=1, inf_faults=0,
+                        pressure_windows=0, transient_failures=0,
+                        burst_every=0, arrival_lambda=0.0)
+    (fault_step,) = inj.logit_faults
+    base = _vanilla_tokens(fp_model, PROMPTS, max_new=10)
+    eng = _engine(fp_model, guards=True, faults=inj)
+    uids = eng.add_requests(PROMPTS, max_new_tokens=10)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    states = {u: fin[u].state for u in uids}
+    failed = [u for u in uids if states[u] is RequestState.FAILED]
+    ok = [u for u in uids if states[u] is RequestState.FINISHED]
+    assert len(failed) == 1 and len(ok) == 1
+    d = fin[failed[0]].diagnostics
+    assert d["kind"] == "nonfinite_logits" and d["phase"] == "decode"
+    assert d["engine_step"] == fault_step and d["nonfinite"] >= 1
+    # the survivor's stream is untouched by its neighbor's quarantine
+    assert fin[ok[0]].tokens == base[uids.index(ok[0])]
+    # the failed row kept its pre-fault prefix (partial work preserved):
+    # 1 admission token + one token per decode step before the fault
+    assert (fin[failed[0]].tokens
+            == base[uids.index(failed[0])][:fault_step + 1])
+
+
+def test_transient_faults_need_bounded_retry(fp_model):
+    mk = lambda: FaultInjector(seed=3, horizon=8, nan_faults=0,
+                               inf_faults=0, pressure_windows=0,
+                               transient_failures=1,
+                               max_consecutive_failures=2,
+                               burst_every=0, arrival_lambda=0.0)
+    # without a retry policy the transient fault propagates, pre-mutation
+    eng = _engine(fp_model, faults=mk())
+    uids = eng.add_requests(PROMPTS, max_new_tokens=10)
+    with pytest.raises(EngineFault, match="transient") as ei:
+        eng.run_to_completion()
+    assert ei.value.transient
+    before = [list(eng.active[u].tokens) for u in uids]
+    # the raise happened before any state mutation: a retried driver
+    # continues to the SAME tokens as a fault-free run
+    eng.run_to_completion(retry=RetryPolicy(max_attempts=3, backoff_s=0.0))
+    fin = eng.take_finished()
+    got = [fin[u].tokens for u in uids]
+    assert [t[:len(b)] for t, b in zip(got, before)] == before
+    assert got == _vanilla_tokens(fp_model, PROMPTS, max_new=10)
+    assert all(fin[u].state is RequestState.FINISHED for u in uids)
+
+
+def test_seeded_fault_plan_replays_exactly(fp_model):
+    # full fault plan (NaN + pressure + transient failures) driven twice
+    # from the same seed: terminal states, tokens, and counters must be
+    # bit-identical
+    def run():
+        inj = FaultInjector(seed=5, horizon=16, nan_faults=1, inf_faults=1,
+                            pressure_windows=1, pressure_frac=(0.3, 0.4),
+                            transient_failures=1, burst_every=0,
+                            arrival_lambda=0.0)
+        clock = StepClock()
+        eng = _engine(fp_model, guards=True, faults=inj, clock=clock)
+        uids = eng.add_requests(PROMPTS, max_new_tokens=10)
+        retry = RetryPolicy(max_attempts=3, backoff_s=0.0)
+        for _ in range(60):
+            retry.run(eng.step)
+            clock.advance()
+            if not eng.active and not len(eng.queue):
+                break
+        fin = eng.take_finished()
+        assert sorted(fin) == sorted(uids)        # every request terminal
+        return ([(fin[u].state.value, fin[u].tokens) for u in uids],
+                eng.stats()["lifecycle"], eng.stats()["preemptions"])
+
+    assert run() == run()

@@ -423,3 +423,70 @@ def test_slot_reuse_and_constant_traces_across_waves(fp_model,
     assert st["verify_traces"] == 1
     assert st["draft_decode_traces"] == 1
     assert st["engine_steps"] > 2               # several windows really ran
+
+
+def test_spec_preempt_resume_parity(fp_model, unrelated_draft):
+    """Preemption mid-stream under speculation: the victim's BOTH caches
+    (target + draft) are cleared and rebuilt on resume — prefill of the
+    original prompt plus a teacher-forced replay through the decode jits
+    — so its remaining windows emit tokens bit-identical to an
+    uninterrupted spec run, which is itself bit-identical to vanilla."""
+    cfg, params = fp_model
+    base = _serve(ServingEngine(params, cfg, n_slots=2, max_len=64,
+                                min_bucket=8),
+                  PROMPTS[:2], max_new=8)
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=64, min_bucket=8,
+                        draft_params=unrelated_draft, spec=SpecConfig(gamma=3))
+    uids = eng.add_requests(PROMPTS[:2], max_new_tokens=8)
+    eng.step()                                   # one window in
+    eng.set_cache_pressure(3)                    # below both fills
+    eng.step()
+    st = eng.stats()
+    assert st["preemptions"] == 2 and not eng.active
+    eng.set_cache_pressure(None)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    assert [fin[u].tokens for u in uids] == base
+    assert eng.stats()["resumes"] == 2
+
+
+def test_nonfinite_verify_row_quarantined_mid_window(fp_model,
+                                                     unrelated_draft):
+    """guards=True + an injected NaN in one slot's verify logits: that
+    request emits NOTHING from the window and retires FAILED with
+    diagnostics (rollback clears its slot first); the other row's window
+    accepts normally and its full stream stays bit-identical to a clean
+    vanilla engine."""
+    from repro.serve import FaultInjector, RequestState
+
+    cfg, params = fp_model
+    base = _serve(ServingEngine(params, cfg, n_slots=2, max_len=64,
+                                min_bucket=8),
+                  PROMPTS[:2], max_new=10)
+    inj = FaultInjector(seed=2, horizon=8, nan_faults=1, inf_faults=0,
+                        pressure_windows=0, transient_failures=0,
+                        burst_every=0, arrival_lambda=0.0)
+    (fault_step,) = inj.logit_faults
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=64, min_bucket=8,
+                        draft_params=unrelated_draft,
+                        spec=SpecConfig(gamma=3), guards=True, faults=inj)
+    uids = eng.add_requests(PROMPTS[:2], max_new_tokens=10)
+    emitted_at_fault = None
+    while eng.active:
+        out = eng.step()
+        if eng.engine_steps - 1 == fault_step:
+            emitted_at_fault = out
+    fin = eng.take_finished()
+    failed = [u for u in uids if fin[u].state is RequestState.FAILED]
+    ok = [u for u in uids if fin[u].state is RequestState.FINISHED]
+    assert len(failed) == 1 and len(ok) == 1
+    d = fin[failed[0]].diagnostics
+    assert d["kind"] == "nonfinite_logits" and d["phase"] == "verify"
+    assert d["engine_step"] == fault_step
+    # the quarantined request emitted nothing from the poisoned window...
+    assert failed[0] not in emitted_at_fault
+    # ...its surviving prefix is a prefix of the clean stream, and the
+    # neighbor's full stream is untouched
+    b = base[uids.index(failed[0])]
+    assert fin[failed[0]].tokens == b[:len(fin[failed[0]].tokens)]
+    assert fin[ok[0]].tokens == base[uids.index(ok[0])]
