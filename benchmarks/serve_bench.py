@@ -29,6 +29,13 @@ resumes, backpressure) land in BENCH_serve.json next to the speed rows.
 It runs on an fp smoke model — lifecycle behavior is numerics-blind, so
 CI's `--inject-faults` mode skips the trained-model setup entirely.
 
+The PAGED CAPACITY scenario fixes an HBM budget (the contiguous
+layout's slot-cache bytes) and counts admissions before typed
+backpressure under a shared system prompt: contiguous slots vs a paged
+pool of the same byte size (DESIGN.md §11), fp and int8 resident pages.
+It ASSERTS paged >= 2x contiguous and int8 >= paged fp, and the counts
+land in BENCH_serve.json under ``paged_capacity``.
+
 `serve_bench()` writes BENCH_serve.json at the repo root (the serving
 trajectory's counterpart to BENCH_kernel.json); CI runs `--smoke` and
 the fault-injection smoke `--smoke --inject-faults`.
@@ -206,6 +213,88 @@ def robustness_scenario(smoke: bool = False, seed: int = 0) -> dict:
     }
 
 
+def paged_capacity_scenario(smoke: bool = False) -> dict:
+    """Admission capacity at a FIXED HBM budget: contiguous slots vs a
+    paged pool of the same byte size (fp and int8 resident pages), under
+    a common system prompt.  Counts requests admitted before typed
+    backpressure (AdmissionRejected / PoolExhausted) with no decoding —
+    pure cache-capacity accounting, deterministic by construction.
+
+    The contiguous layout pins n_slots * max_len positions no matter how
+    short the requests are; the paged layout pins only the pages each
+    request touches, prefix sharing collapses the common system prompt to
+    ONE physical copy, and int8 pages fit ~4x the tokens per byte.  The
+    scenario ASSERTS paged >= 2x contiguous and int8 >= paged fp, so CI
+    cannot silently regress the capacity win."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api as mapi
+
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = mapi.init_params(jax.random.PRNGKey(0), cfg)
+    n_slots, max_len, ps = 4, 64, 8
+    max_new = 4
+    sys_prompt = list(range(1, 25))          # 24-token shared system prompt
+
+    def admit_until_full(eng, budget):
+        count = 0
+        for i in range(budget):
+            try:
+                eng.add_request(sys_prompt + [30 + i % (cfg.vocab - 31)],
+                                max_new_tokens=max_new)
+            except AdmissionRejected:        # PoolExhausted subclasses it
+                break
+            count += 1
+        return count
+
+    def paged(n_pages, kv_dtype=None, share=True):
+        # slots are table rows (tiny) for the paged layout — size the slot
+        # count so only the PAGE POOL can be the binding constraint
+        return ServingEngine(params, cfg, n_slots=n_pages,
+                             max_len=max_len, min_bucket=8, prepare=False,
+                             kv_layout="paged", page_size=ps,
+                             kv_pages=n_pages, kv_dtype=kv_dtype,
+                             share_prefixes=share)
+
+    contig = ServingEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                           min_bucket=8, prepare=False)
+    cap_contig = admit_until_full(contig, 4 * n_slots)
+
+    pool_fp = n_slots * (max_len // ps)      # capacity-equivalent fp pool
+    probe_fp = paged(pool_fp).stats()["paged"]
+    hbm_budget = pool_fp * probe_fp["bytes_per_page"]
+    probe_i8 = paged(pool_fp, kv_dtype="int8").stats()["paged"]
+    pool_i8 = hbm_budget // probe_i8["bytes_per_page"]
+
+    budget = 4 * pool_i8
+    cap_fp_noshare = admit_until_full(paged(pool_fp, share=False), budget)
+    eng_fp = paged(pool_fp)
+    cap_fp = admit_until_full(eng_fp, budget)
+    eng_i8 = paged(pool_i8, kv_dtype="int8")
+    cap_i8 = admit_until_full(eng_i8, budget)
+
+    assert cap_fp >= 2 * cap_contig, (
+        f"paged fp capacity {cap_fp} < 2x contiguous {cap_contig} at the "
+        f"same HBM budget — the paged layout lost its capacity win")
+    assert cap_i8 >= cap_fp, (
+        f"int8-page capacity {cap_i8} < paged fp {cap_fp} — int8 pages "
+        f"stopped paying for themselves")
+    st = eng_fp.stats()["paged"]
+    return {
+        "n_slots_contiguous": n_slots, "max_len": max_len,
+        "page_size": ps, "system_prompt_tokens": len(sys_prompt),
+        "hbm_budget_bytes": int(hbm_budget),
+        "pool_pages": {"fp": pool_fp, "int8": int(pool_i8)},
+        "capacity": {"contiguous": cap_contig,
+                     "paged_fp_noshare": cap_fp_noshare,
+                     "paged_fp": cap_fp, "paged_int8": cap_i8},
+        "paged_fp_stats": {k: st[k] for k in
+                           ("prefix_hits", "prefix_shared_tokens",
+                            "pages_in_use", "pool_utilization")},
+    }
+
+
 def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False,
                 faults_only: bool = False):
     if faults_only:
@@ -310,6 +399,14 @@ def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False,
                  secs / steps * 1e6,
                  f"steps={steps};tokens_per_step={total / steps:.2f};"
                  f"acceptance={st['acceptance_rate']:.2f}"))
+
+    cap = paged_capacity_scenario(smoke=smoke)
+    results["paged_capacity"] = cap
+    rows.append(("serve/paged_capacity", float(cap["capacity"]["paged_fp"]),
+                 f"contiguous={cap['capacity']['contiguous']};"
+                 f"paged_fp={cap['capacity']['paged_fp']};"
+                 f"paged_int8={cap['capacity']['paged_int8']};"
+                 f"hbm_bytes={cap['hbm_budget_bytes']}"))
 
     rob = robustness_scenario(smoke=smoke)
     results["robustness"] = rob

@@ -160,11 +160,27 @@ def spec_for_cache(name: str, shape, cfg, ax: MeshAxes) -> PartitionSpec:
     dynamically) stays replicated."""
     if not shape:
         return PartitionSpec()
+    field = name.rsplit(".", 1)[-1] if "." in name else name
+    # Paged layout (models/layers.py PagedKVCache, mla.py PagedMLACache):
+    # pool leaves are (L, n_pages+1, page_size, ...) — axis 1 is the PAGE
+    # axis, not a slot axis, and any slot's table row may name any page, so
+    # pages shard over "dp" (gathers cross shards; XLA inserts the
+    # collective) while the tiny (L, B, max_pages) tables replicate —
+    # the default batch-axis rule would wrongly split their slot axis.
+    if field == "table":
+        return PartitionSpec()
     entries = [None] * len(shape)
+    if field in ("kp", "vp", "cp", "pp",
+                 "k_scale", "v_scale", "c_scale", "p_scale"):
+        if len(shape) >= 2 and _shardable(shape[1], ax.dp_size):
+            entries[1] = ax.dp
+        if (field in ("kp", "vp") and len(shape) == 5
+                and _shardable(shape[-2], ax.model_size)):
+            entries[-2] = ax.model
+        return PartitionSpec(*entries)
     batch_axis = 1 if len(shape) >= 2 else 0
     if _shardable(shape[batch_axis], ax.dp_size):
         entries[batch_axis] = ax.dp
-    field = name.rsplit(".", 1)[-1] if "." in name else name
     if (field in ("k", "v", "cross_k", "cross_v") and len(shape) == 5
             and _shardable(shape[-2], ax.model_size)):
         entries[-2] = ax.model

@@ -95,6 +95,27 @@ def main():
                          "= per-token dynamic absmax quantization folded "
                          "into the fused kernel (opt-in; changes numerics "
                          "within the documented bound, DESIGN.md §9)")
+    ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="slot KV cache layout: contiguous (one "
+                         "(max_len,) strip per slot) or paged (global "
+                         "page pool + per-slot page tables; pages "
+                         "allocated on demand, freed at retirement, "
+                         "shared across common prompt prefixes — "
+                         "DESIGN.md §11)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout; must divide "
+                         "--max-len)")
+    ap.add_argument("--kv-pool-pages", type=int, default=0,
+                    help="page-pool size (paged layout; 0 = capacity-"
+                         "equivalent to contiguous: slots * max_len / "
+                         "page_size).  Larger overcommits admission "
+                         "against typed PoolExhausted backpressure")
+    ap.add_argument("--kv-dtype", choices=("f32", "int8"), default="f32",
+                    help="resident-page precision (paged layout): int8 "
+                         "stores K/V quantized per token row with absmax "
+                         "scales (~4x tokens per byte, bounded error, "
+                         "no preemption)")
     ap.add_argument("--queue-depth", type=int, default=0,
                     help="bounded admission queue depth (0 = engine "
                          "default, 2x slots); submissions beyond it see "
@@ -190,7 +211,19 @@ def main():
                         guards=args.guards or args.inject_faults,
                         faults=injector,
                         queue_depth=args.queue_depth or None,
-                        on_pressure=args.on_pressure, clock=clock)
+                        on_pressure=args.on_pressure, clock=clock,
+                        kv_layout=args.kv_layout,
+                        page_size=(args.page_size
+                                   if args.kv_layout == "paged" else None),
+                        kv_pages=(args.kv_pool_pages or None
+                                  if args.kv_layout == "paged" else None),
+                        kv_dtype=(args.kv_dtype
+                                  if args.kv_layout == "paged"
+                                  and args.kv_dtype != "f32" else None))
+    if args.kv_layout == "paged":
+        print(f"[serve] paged KV cache: page_size={eng.page_size}, "
+              f"pool={eng.n_pages} pages, resident dtype "
+              f"{eng.kv_dtype or 'fp'}")
     if args.act_dtype != "f32":
         print(f"[serve] activations: per-token {args.act_dtype} "
               f"(opt-in weight-activation quantized serving)")
@@ -253,6 +286,18 @@ def main():
     print(f"[serve] prefill traces {st['prefill_traces']} "
           f"(buckets {st['buckets']}), compile-cache hit rate "
           f"{st['bucket_hit_rate']:.0%}")
+    if "paged" in st:
+        pg = st["paged"]
+        print(f"[serve] pages: {pg['pages_in_use']}/{pg['n_pages']} in use "
+              f"({pg['pool_utilization']:.0%}), peak {pg['peak_pages_in_use']} "
+              f"pool / {pg['peak_pages_per_request']} per request; "
+              f"resident {pg['bytes_resident'] / 1024:.0f} KiB of "
+              f"{pg['bytes_pool'] / 1024:.0f} KiB pool vs "
+              f"{pg['bytes_contiguous_fp'] / 1024:.0f} KiB contiguous fp; "
+              f"prefix hits {pg['prefix_hits']} "
+              f"({pg['prefix_shared_tokens']} tokens shared), "
+              f"cow copies {pg['cow_copies']}, "
+              f"evictions {pg['page_evictions']}")
     lc = st["lifecycle"]
     nonterminal = len(eng.active) + st["queued"]
     print(f"[serve] lifecycle: {json.dumps(lc)}, preemptions "

@@ -29,11 +29,28 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array],
 
 
 def make_cache(cfg: ModelConfig, batch: int, max_len: int,
-               src_len: Optional[int] = None, dtype=jnp.bfloat16):
+               src_len: Optional[int] = None, dtype=jnp.bfloat16, *,
+               page_size: Optional[int] = None,
+               n_pages: Optional[int] = None, kv_dtype=None):
+    """Family-dispatched cache allocation.
+
+    encdec REQUIRES ``src_len``: the cross-attention strips are written
+    once at prefill from exactly ``src_len`` encoder rows and never grow,
+    so sizing them to anything else (the old ``max_len`` fallback) only
+    wastes HBM per slot.  ``page_size``/``n_pages``/``kv_dtype`` switch
+    attention families to the paged layout (see transformer.init_cache).
+    """
     if cfg.family == "encdec":
-        return ed.init_encdec_cache(cfg, batch, max_len, src_len or max_len,
-                                    dtype)
-    return tf.init_cache(cfg, batch, max_len, dtype)
+        if page_size is not None:
+            tf.validate_paged_support(cfg)  # raises: encdec is not paged
+        if src_len is None:
+            raise ValueError(
+                "make_cache: encdec needs the actual src_len — the cross "
+                "cache is written once at prefill and never grows, so "
+                "there is no meaningful default")
+        return ed.init_encdec_cache(cfg, batch, max_len, src_len, dtype)
+    return tf.init_cache(cfg, batch, max_len, dtype, page_size=page_size,
+                         n_pages=n_pages, kv_dtype=kv_dtype)
 
 
 def prefill_step(params, cfg: ModelConfig, batch: Dict[str, Array], cache,
@@ -62,6 +79,12 @@ def validate_span_support(cfg: ModelConfig) -> None:
     """Raise NotImplementedError unless span decode is exactly equivalent
     to successive decode steps on this config (see transformer.py)."""
     tf.validate_span_support(cfg)
+
+
+def validate_paged_support(cfg: ModelConfig) -> None:
+    """Raise NotImplementedError unless this config can serve from a
+    paged KV cache (see transformer.py)."""
+    tf.validate_paged_support(cfg)
 
 
 def decode_span(params, cfg: ModelConfig, tokens: Array, cache,

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import context as dctx
+from repro.kernels import ops as kops
 from . import modules as nn
 
 Array = jax.Array
@@ -222,6 +223,102 @@ def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache
+# ---------------------------------------------------------------------------
+#
+# The contiguous cache pins a dense (B, max_len, KH, D) strip per slot; the
+# paged cache replaces it with ONE global page pool shared by every slot plus
+# a per-slot page table:
+#
+#   pool   (n_pages + 1, page_size, KH, D)   row n_pages = SCRATCH page
+#   table  (B, max_pages) int32              scratch-filled where unallocated
+#   length (B,) int32                        same fill contract as KVCache
+#
+# Model code NEVER mutates tables — the serving engine owns them on the host
+# (allocation, copy-on-write, freeing) and syncs them in as operands.  The
+# scratch row absorbs every write a contiguous cache would mask or drop:
+# free slots with stale fill counters, span tails past max_len, unallocated
+# blocks.  Reads gather `pool[table]`, which reconstructs EXACTLY the
+# contiguous (B, max_pages*page_size, ...) view — same shape, same dtype, so
+# the downstream masked-softmax attention lowers to the same XLA reduction
+# tree and paged fp decode reproduces contiguous decode's logits (DESIGN.md
+# §11 gives the argument; tests/test_paged_serving.py asserts it).
+#
+# With kv_dtype="int8" the pool rows are int8 with a per-token absmax scale
+# (`kernels.ops.quantize_activations` — the PR 5 A8 machinery), dequantized
+# at the gather; the per-element error is bounded by scale/2.
+
+
+class PagedKVCache(NamedTuple):
+    kp: Array                       # (n_pages+1, page_size, KH, D)
+    vp: Array                       # (n_pages+1, page_size, KH, D)
+    k_scale: Optional[Array]        # (n_pages+1, page_size) f32 iff int8 pool
+    v_scale: Optional[Array]
+    table: Array                    # (B, max_pages) int32
+    length: Array                   # (B,) int32
+
+
+def init_paged_kv_cache(batch: int, max_len: int, kv_heads: int,
+                        head_dim: int, *, page_size: int, n_pages: int,
+                        dtype=jnp.bfloat16, kv_dtype=None) -> PagedKVCache:
+    if max_len % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide max_len {max_len}")
+    pool_dtype = jnp.int8 if kv_dtype == "int8" else dtype
+    scale = (jnp.zeros((n_pages + 1, page_size), jnp.float32)
+             if kv_dtype == "int8" else None)
+    return PagedKVCache(
+        kp=jnp.zeros((n_pages + 1, page_size, kv_heads, head_dim), pool_dtype),
+        vp=jnp.zeros((n_pages + 1, page_size, kv_heads, head_dim), pool_dtype),
+        k_scale=scale,
+        v_scale=scale,
+        table=jnp.full((batch, max_len // page_size), n_pages, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def paged_write_ids(table: Array, length: Array, S: int, page_size: int,
+                    scratch: int) -> Tuple[Array, Array]:
+    """Page ids + within-page offsets for S tokens appended at each slot's
+    fill level.  Positions past max_len (stale free-slot counters, span
+    tails) and unallocated blocks route to the scratch page — the paged
+    equivalent of the contiguous paths' masking / mode="drop"."""
+    mp = table.shape[1]
+    idx = length[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    blk = jnp.minimum(idx // page_size, mp - 1)
+    pid = jnp.take_along_axis(table, blk, axis=1)
+    pid = jnp.where(idx >= mp * page_size, scratch, pid)
+    return pid, idx % page_size
+
+
+def pool_write(pool: Array, scale: Optional[Array], pid: Array, off: Array,
+               rows: Array) -> Tuple[Array, Optional[Array]]:
+    """Scatter new rows (B, S, feat...) into pool[pid, off].  For an int8
+    pool each token row is absmax-quantized (scale stored alongside);
+    duplicate (pid, off) pairs only ever target scratch, whose contents
+    are never read unmasked."""
+    if scale is None:
+        return pool.at[pid, off].set(rows.astype(pool.dtype)), None
+    flat = rows.reshape(rows.shape[:2] + (-1,))
+    xq, sc = kops.quantize_activations(flat.astype(jnp.float32))
+    return (pool.at[pid, off].set(xq.reshape(rows.shape)),
+            scale.at[pid, off].set(sc[..., 0]))
+
+
+def pool_view(pool: Array, scale: Optional[Array], table: Array,
+              out_dtype) -> Array:
+    """Gather each slot's pages into the contiguous-equivalent
+    (B, max_pages*page_size, feat...) view.  fp pools come back verbatim
+    (bitwise the contiguous cache at valid positions); int8 pools
+    dequantize through their per-token scales into ``out_dtype``."""
+    g = pool[table]                                 # (B, mp, ps, feat...)
+    if scale is not None:
+        sc = scale[table].reshape(g.shape[:3] + (1,) * (g.ndim - 3))
+        g = (g.astype(jnp.float32) * sc).astype(out_dtype)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
 def gqa_attention(
     p: Dict[str, Any],
     x: Array,                      # (B, S, D)
@@ -277,6 +374,33 @@ def gqa_attention(
                                 q_block=cfg.q_block, kv_block=cfg.kv_block,
                                 block_spec=block_spec)
         new_cache = None
+    elif isinstance(cache, PagedKVCache):
+        # Paged decode / span-verify: append through the page table, then
+        # run the SAME masked attention as the contiguous branches over the
+        # gathered view — the view has the contiguous cache's exact shape
+        # and (for fp pools) bit pattern at valid positions, so paged fp
+        # decode is parity-exact with the contiguous cache.
+        if window is not None:
+            raise NotImplementedError(
+                "paged KV cache does not support attn_window configs")
+        if S > 1 and not span:
+            raise NotImplementedError(
+                "paged caches take no chunked prefill: the engine prefills "
+                "contiguous fragments and page-inserts them")
+        ps = cache.kp.shape[1]
+        pid, off = paged_write_ids(cache.table, cache.length, S, ps,
+                                   cache.kp.shape[0] - 1)
+        kp, k_scale = pool_write(cache.kp, cache.k_scale, pid, off, k)
+        vp, v_scale = pool_write(cache.vp, cache.v_scale, pid, off, v)
+        new_len = cache.length + S
+        k_all = pool_view(kp, k_scale, cache.table, q.dtype)
+        v_all = pool_view(vp, v_scale, cache.table, q.dtype)
+        if S == 1:
+            out = _decode_attention(q, k_all, v_all, new_len, None)
+        else:
+            out = _span_decode_attention(q, k_all, v_all, cache.length, None)
+        new_cache = PagedKVCache(kp, vp, k_scale, v_scale,
+                                 cache.table, new_len)
     elif window is not None and cache.k.shape[1] <= window:
         # Ring cache for sliding-window attention (cache holds exactly the
         # window; slot = absolute_position % W).  Keys are stored post-RoPE,

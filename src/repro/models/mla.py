@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.dist import context as dctx
 from . import modules as nn
-from .layers import NEG_INF, apply_rope, blocked_attention, rope_angles
+from .layers import (NEG_INF, apply_rope, blocked_attention, paged_write_ids,
+                     pool_view, pool_write, rope_angles)
 
 Array = jax.Array
 
@@ -30,6 +31,36 @@ def init_mla_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16) -> MLACach
     return MLACache(
         c_kv=jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
         k_pe=jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+class PagedMLACache(NamedTuple):
+    """Paged compressed-KV cache: same pool/table/scratch contract as
+    `layers.PagedKVCache`, with rank-3 pools for the latent strips."""
+    cp: Array                       # (n_pages+1, page_size, kv_lora)
+    pp: Array                       # (n_pages+1, page_size, rope_head_dim)
+    c_scale: Optional[Array]        # (n_pages+1, page_size) f32 iff int8
+    p_scale: Optional[Array]
+    table: Array                    # (B, max_pages) int32
+    length: Array                   # (B,) int32
+
+
+def init_paged_mla_cache(batch: int, max_len: int, cfg, *, page_size: int,
+                         n_pages: int, dtype=jnp.bfloat16,
+                         kv_dtype=None) -> PagedMLACache:
+    if max_len % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide max_len {max_len}")
+    pool_dtype = jnp.int8 if kv_dtype == "int8" else dtype
+    scale = (jnp.zeros((n_pages + 1, page_size), jnp.float32)
+             if kv_dtype == "int8" else None)
+    return PagedMLACache(
+        cp=jnp.zeros((n_pages + 1, page_size, cfg.kv_lora), pool_dtype),
+        pp=jnp.zeros((n_pages + 1, page_size, cfg.rope_head_dim), pool_dtype),
+        c_scale=scale,
+        p_scale=scale,
+        table=jnp.full((batch, max_len // page_size), n_pages, jnp.int32),
         length=jnp.zeros((batch,), jnp.int32),
     )
 
@@ -91,6 +122,30 @@ def mla_attention(
 
     if cache is not None:
         new_len = cache.length + S
+        if isinstance(cache, PagedMLACache):
+            # Paged absorbed decode / span-verify: append latents through
+            # the page table, gather the contiguous-equivalent view, run
+            # the SAME absorbed attention as the contiguous branches.
+            if S > 1 and not span:
+                raise NotImplementedError(
+                    "paged caches take no chunked prefill: the engine "
+                    "prefills contiguous fragments and page-inserts them")
+            ps = cache.cp.shape[1]
+            pid, off = paged_write_ids(cache.table, cache.length, S, ps,
+                                       cache.cp.shape[0] - 1)
+            cp, c_scale = pool_write(cache.cp, cache.c_scale, pid, off, c_kv)
+            pp, p_scale = pool_write(cache.pp, cache.p_scale, pid, off, k_pe)
+            c_all = pool_view(cp, c_scale, cache.table, x.dtype)
+            pe_all = pool_view(pp, p_scale, cache.table, x.dtype)
+            new_cache = PagedMLACache(cp, pp, c_scale, p_scale,
+                                      cache.table, new_len)
+            if S == 1:
+                out = _absorbed_decode(p, q_nope, q_pe, c_all, pe_all,
+                                       new_len, cfg)
+            else:
+                out = _absorbed_span(p, q_nope, q_pe, c_all, pe_all,
+                                     cache.length, cfg)
+            return nn.dense(p["o"], out.reshape(B, S, H * dv), "o"), new_cache
         if S == 1:
             brange = jnp.arange(B)
             idx = cache.length

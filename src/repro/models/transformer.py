@@ -353,13 +353,52 @@ def lm_loss(params, cfg, batch: Dict[str, Array], unroll: bool = False):
 # Serving: caches, prefill, decode
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def validate_paged_support(cfg) -> None:
+    """Which configs can serve from a paged KV cache.  The gated set
+    mirrors `validate_span_support` plus windowed attention: paging needs
+    position-indexed, fill-masked, non-ring cache storage (the page table
+    replays the contiguous layout exactly; a ring cache or recurrent
+    state has no per-position rows to page)."""
+    if cfg.family in ("rwkv", "hybrid"):
+        raise NotImplementedError(
+            f"paged KV cache: the {cfg.family} family keeps recurrent "
+            f"state, not per-position K/V rows — there is nothing to page")
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "paged KV cache: encdec serving is unsupported (ServingEngine "
+            "rejects the family at construction)")
+    if cfg.attn_window is not None:
+        raise NotImplementedError(
+            "paged KV cache: sliding-window ring caches index slots by "
+            "position % W, which a page table does not reproduce")
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+               page_size: Optional[int] = None,
+               n_pages: Optional[int] = None, kv_dtype=None):
+    """Stacked per-layer caches.  With ``page_size`` set, attention layers
+    get paged pools + tables instead of contiguous strips (``n_pages``
+    defaults to exactly contiguous capacity, batch * max_len tokens;
+    ``kv_dtype='int8'`` stores resident pages quantized)."""
     L_ = cfg.n_layers
 
     def stack(make_one, n):
         one = make_one()
         return jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+
+    if page_size is not None:
+        validate_paged_support(cfg)
+        if n_pages is None:
+            n_pages = batch * (max_len // page_size)
+        if cfg.use_mla:
+            return stack(lambda: mla_lib.init_paged_mla_cache(
+                batch, max_len, cfg, page_size=page_size, n_pages=n_pages,
+                dtype=dtype, kv_dtype=kv_dtype), L_)
+        return stack(lambda: L.init_paged_kv_cache(
+            batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+            page_size=page_size, n_pages=n_pages, dtype=dtype,
+            kv_dtype=kv_dtype), L_)
 
     if cfg.family == "rwkv":
         return stack(lambda: rwkv.init_rwkv_cache(batch, cfg, dtype), L_)

@@ -5,4 +5,6 @@ from .lifecycle import (AdmissionQueue, AdmissionRejected,  # noqa: F401
                         DeadlineExceeded, EngineFault, IncompleteRun,
                         RequestState, RetryPolicy, StepClock,
                         TERMINAL_STATES)
+from .paging import (PageAllocator, PoolExhausted,  # noqa: F401
+                     PrefixRegistry)
 from .speculative import SpecConfig  # noqa: F401

@@ -107,6 +107,30 @@ rolled-back cache are bit-identical to vanilla decode (DESIGN.md §8).
 Families that cannot roll back (recurrent state, router-coupled moe,
 ring caches) are rejected at construction.
 
+Paged KV cache (``kv_layout="paged"``, DESIGN.md §11): instead of one
+contiguous (n_slots, max_len) K/V strip per slot, each layer owns a
+global page pool ``(n_pages + 1, page_size, ...)`` (the last row is the
+scratch page absorbing masked writes) and each slot a page-table row,
+mirrored on the host and broadcast to the device before any consuming
+jit (``_sync_tables``).  Pages are allocated on demand — at admission
+for the prompt, per step for decode writes (``_ensure_capacity``) — and
+freed at retirement/preemption; ``PoolExhausted`` is the typed
+backpressure when the pool runs dry (queued work waits, running work
+preempts or retires TRUNCATED with diagnostics).  Prefill stays
+contiguous: fragments are scattered into pages afterwards
+(``_paged_insert``), so the prefill jits are shared with the contiguous
+layout.  Paged fp decode is bit-identical to contiguous decode (the
+gathered view has the contiguous cache's exact shape, so XLA reduces
+identically; fresh pages are zeroed so masked rows contribute exactly
+0.0).  ``kv_dtype="int8"`` stores resident pages quantized per token row
+(absmax/127 scales in a parallel pool) — bounded error (scale/2 per
+element), ~4x the tokens per byte of fp32, and no preemption (an fp
+replay cannot reproduce int8 history; pressure truncates, like moe).
+Requests sharing a prompt prefix share physical pages (refcounted via
+``PrefixRegistry``) and copy-on-write at the first write into a shared
+page — prefill right-padding invariance makes the donor's page contents
+bitwise what the sharer's own prefill would have produced.
+
 ``prefill_traces`` / ``decode_traces`` count actual XLA traces (a Python
 side effect inside the jitted function runs once per trace); ``stats()``
 reports them next to the bucketing policy's compile-cache accounting.
@@ -141,6 +165,7 @@ from .faults import FaultInjector, nonfinite_rows
 from .lifecycle import (AdmissionQueue, AdmissionRejected, DeadlineExceeded,
                         EngineFault, IncompleteRun, RequestState, RetryPolicy,
                         TERMINAL_STATES)
+from .paging import PageAllocator, PoolExhausted, PrefixRegistry
 from .speculative import SpecConfig
 
 Array = jax.Array
@@ -160,6 +185,17 @@ _PADDED_FAMILIES = ("dense",)
 # (KVCache.k/v, MLACache.c_kv/k_pe) vs. fill counters to pin to it.
 _SEQ_LEAVES = ("k", "v", "c_kv", "k_pe")
 _LEN_LEAVES = ("length",)
+
+# Paged-cache leaf names (models/layers.py PagedKVCache, mla.py
+# PagedMLACache): pool rows / per-row int8 scales, each mapped to the
+# contiguous-fragment leaf that feeds it at admission scatter time.  The
+# "table" leaf is owned by the engine's host mirror (see _sync_tables) and
+# the rollback/insert machinery never touches it — masking by the fill
+# counter is what hides a rolled-back tail, exactly as in the contiguous
+# layout.
+_POOL_SRC = {"kp": "k", "vp": "v", "cp": "c_kv", "pp": "k_pe"}
+_SCALE_SRC = {"k_scale": "k", "v_scale": "v",
+              "c_scale": "c_kv", "p_scale": "k_pe"}
 
 
 @dataclasses.dataclass
@@ -271,7 +307,12 @@ class ServingEngine:
                  faults: Optional[FaultInjector] = None,
                  queue_depth: Optional[int] = None,
                  on_pressure: str = "preempt",
-                 clock=None):
+                 clock=None,
+                 kv_layout: str = "contiguous",
+                 page_size: Optional[int] = None,
+                 kv_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 share_prefixes: bool = True):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
@@ -285,6 +326,37 @@ class ServingEngine:
             raise ValueError(
                 f"on_pressure must be 'preempt' or 'truncate', got "
                 f"{on_pressure!r}")
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(
+                f"kv_layout must be 'contiguous' or 'paged', got "
+                f"{kv_layout!r}")
+        self._paged = kv_layout == "paged"
+        if not self._paged and (page_size is not None or kv_pages is not None
+                                or kv_dtype is not None):
+            raise ValueError(
+                "page_size / kv_pages / kv_dtype configure the paged cache "
+                "— pass kv_layout='paged'")
+        self.page_size = None
+        self.n_pages = None
+        self.kv_dtype = None
+        if self._paged:
+            api.validate_paged_support(cfg)
+            if kv_dtype in (None, "f32"):
+                kv_dtype = None
+            elif kv_dtype != "int8":
+                raise ValueError(
+                    f"unsupported kv_dtype {kv_dtype!r} (expected 'f32' or "
+                    f"'int8')")
+            self.page_size = int(page_size) if page_size is not None else 16
+            if self.page_size < 1 or max_len % self.page_size:
+                raise ValueError(
+                    f"page_size={self.page_size} must be >= 1 and divide "
+                    f"max_len={max_len}")
+            # capacity-equivalent default: the pool holds exactly what the
+            # contiguous layout reserved; pass kv_pages to over/undercommit
+            self.n_pages = (int(kv_pages) if kv_pages is not None
+                            else n_slots * (max_len // self.page_size))
+            self.kv_dtype = kv_dtype
         if draft_plan_bn is not None or draft_plan_bk is not None:
             if spec is None:
                 raise ValueError(
@@ -331,8 +403,12 @@ class ServingEngine:
         self._pressure_limit: Optional[int] = None
         # moe decode rows are router-coupled: a batch-1 resume replay is
         # not bitwise the batched decode, so moe cannot preempt and falls
-        # back to truncation under pressure.
-        self._preemptible = cfg.family != "moe"
+        # back to truncation under pressure.  int8 resident pages cannot
+        # preempt either: resume replays history through the fp decode jit,
+        # which cannot reproduce the quantized K/V the uninterrupted run
+        # accumulated — truncation under pressure, same as moe.
+        self._preemptible = (cfg.family != "moe"
+                             and self.kv_dtype != "int8")
         self.queue = AdmissionQueue(
             queue_depth if queue_depth is not None else max(2 * n_slots, 1))
         # Padding additionally requires linear (non-ring) caches: a
@@ -343,7 +419,13 @@ class ServingEngine:
             min_bucket=min_bucket, max_len=max_len,
             enabled=(bucketing and cfg.family in _PADDED_FAMILIES
                      and cfg.attn_window is None))
-        self.cache = api.make_cache(cfg, n_slots, max_len, dtype=dtype)
+        self._cache_kw: Dict[str, Any] = {}
+        if self._paged:
+            self._cache_kw = dict(page_size=self.page_size,
+                                  n_pages=self.n_pages,
+                                  kv_dtype=self.kv_dtype)
+        self.cache = api.make_cache(cfg, n_slots, max_len, dtype=dtype,
+                                    **self._cache_kw)
         self._cache_shardings = None
         if mesh is not None:
             # Shard params by the serve TP rule (quantized units split
@@ -358,7 +440,31 @@ class ServingEngine:
             self._cache_shardings = shd.tree_shardings(
                 self.cache, shd.spec_for_cache, cfg, mesh)
             self.cache = jax.device_put(self.cache, self._cache_shardings)
-        self._cache_dtype = jax.tree_util.tree_leaves(self.cache)[0].dtype
+        # fp fragment dtype: prefill fragments are ALWAYS contiguous fp
+        # caches (paged admission scatters them into pool pages afterwards),
+        # so derive the dtype from the request, canonicalized exactly as
+        # make_cache would — the first cache leaf may be int8/int32 paged.
+        self._cache_dtype = jnp.zeros((), dtype).dtype
+        # ---- paged-cache host state: allocator, tables, counters ---------
+        self.allocator: Optional[PageAllocator] = None
+        self.prefix_registry: Optional[PrefixRegistry] = None
+        if self._paged:
+            self.allocator = PageAllocator(self.n_pages, self.page_size)
+            if share_prefixes:
+                self.prefix_registry = PrefixRegistry(self.allocator)
+            # host mirror of every slot's table row; the engine is the sole
+            # mutator — _sync_tables broadcasts it into the device cache(s)
+            # before any jit that consumes them
+            self._tables = np.full((n_slots, max_len // self.page_size),
+                                   self.allocator.scratch, np.int32)
+            self._tables_dirty = False
+            self._req_pages: Dict[int, List[int]] = {}
+            self.cow_copies = 0
+            self.prefix_hits = 0
+            self.prefix_shared_tokens = 0
+            self.page_evictions = 0
+            self.peak_pages_in_use = 0
+            self.peak_pages_per_request = 0
         self.free = list(range(n_slots))
         self.active: Dict[int, Request] = {}
         self.finished: Dict[int, Request] = {}
@@ -453,7 +559,7 @@ class ServingEngine:
             self.draft_params = (prepare_tree(draft_params, **dprep_kw)
                                  if prepare else draft_params)
             self.draft_cache = api.make_cache(cfg, n_slots, max_len,
-                                              dtype=dtype)
+                                              dtype=dtype, **self._cache_kw)
             if mesh is not None:
                 self.draft_params = jax.device_put(
                     self.draft_params, shd.tree_shardings(
@@ -511,12 +617,68 @@ class ServingEngine:
             self.draft_cache = jax.device_put(self.draft_cache,
                                               self._cache_shardings)
 
+    # ------------------------------------------------------------- paged sync
+    def _sync_tables(self) -> None:
+        """Broadcast the host page-table mirror into every cache's
+        (L, n_slots, max_pages) table leaves before a jit consumes them.
+        The engine is the SOLE table mutator (model code only reads
+        tables), so one broadcast per dirty step keeps host and device in
+        lockstep; clean steps cost nothing."""
+        if not self._paged or not self._tables_dirty:
+            return
+        tbl = jnp.asarray(self._tables)
+
+        def st(path, leaf):
+            if getattr(path[-1], "name", None) == "table":
+                return jnp.broadcast_to(tbl, leaf.shape).astype(leaf.dtype)
+            return leaf
+
+        self.cache = jax.tree_util.tree_map_with_path(st, self.cache)
+        if self.spec is not None:
+            self.draft_cache = jax.tree_util.tree_map_with_path(
+                st, self.draft_cache)
+        self._repin_cache()
+        self._tables_dirty = False
+
+    def _map_pools(self, fn) -> None:
+        """Apply ``fn`` to every pool/scale leaf of the target (and draft)
+        cache — the shared plumbing of page zeroing and COW copies."""
+        def go(path, leaf):
+            name = getattr(path[-1], "name", None)
+            if name in _POOL_SRC or name in _SCALE_SRC:
+                return fn(leaf)
+            return leaf
+
+        self.cache = jax.tree_util.tree_map_with_path(go, self.cache)
+        if self.spec is not None:
+            self.draft_cache = jax.tree_util.tree_map_with_path(
+                go, self.draft_cache)
+        self._repin_cache()
+
+    def _zero_pages(self, pages: Sequence[int]) -> None:
+        """Zero freshly allocated pages in both caches: preserves the
+        contiguous invariant that every masked/unwritten cache row is
+        exactly zero, so a recycled page can never leak its previous
+        holder's rows into another request's (zero-weight) gather — and
+        the zero-weight contribution itself stays exactly 0.0, keeping
+        paged decode bitwise."""
+        idx = jnp.asarray(sorted(set(int(p) for p in pages)), jnp.int32)
+        self._map_pools(lambda l: l.at[:, idx].set(jnp.zeros((), l.dtype)))
+
+    def _copy_pages(self, pairs: Sequence) -> None:
+        """Copy-on-write: duplicate the pool (and scale) rows of shared
+        pages into fresh private ones, target and draft cache alike."""
+        olds = jnp.asarray([int(o) for o, _ in pairs], jnp.int32)
+        news = jnp.asarray([int(n) for _, n in pairs], jnp.int32)
+        self._map_pools(lambda l: l.at[:, news].set(l[:, olds]))
+
     def lower_decode(self):
         """AOT-lower the decode step against the engine's CURRENT
         params/cache (sharded when a mesh is wired) — for HLO inspection:
         tests assert the compiled step contains no weight-sized all-gather
         (decode stays weight-resident per shard).  Note: lowering traces,
         so it bumps `decode_traces`."""
+        self._sync_tables()
         toks = jnp.asarray(self.last_token, jnp.int32)
         with self._mesh_scope():
             return self._decode.lower(self.params, toks, self.cache, None)
@@ -528,6 +690,141 @@ class ServingEngine:
         K/V write per decode step so far (the pending last_token's write
         belongs to the NEXT step)."""
         return len(req.prompt) + len(req.tokens) - 1
+
+    # ------------------------------------------------------------- page plans
+    def _note_page_peaks(self, req: Optional[Request] = None) -> None:
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.allocator.pages_in_use)
+        if req is not None:
+            self.peak_pages_per_request = max(
+                self.peak_pages_per_request,
+                len(self._req_pages.get(req.uid, ())))
+
+    def _alloc_evicting(self, n: int) -> List[int]:
+        """Allocate n pages, evicting prefix-registry entries (oldest
+        first) under exhaustion; ``PoolExhausted`` propagates only once
+        even an empty registry cannot satisfy the request."""
+        while True:
+            try:
+                return self.allocator.alloc(n)
+            except PoolExhausted:
+                if (self.prefix_registry is None
+                        or not self.prefix_registry.evict_one()):
+                    raise
+                self.page_evictions += 1
+
+    def _plan_pages(self, req: Request, n_tokens: int,
+                    exact_ok: bool = True):
+        """Reserve the pages covering ``n_tokens`` resident positions for
+        one request: shared prefix pages first (retained read-only from
+        the registry), fresh private pages for the rest.  Returns
+        ``(pages, table_row, write_row)`` — ``write_row`` marks the blocks
+        the admission scatter may write (scratch everywhere else: shared
+        pages stay read-only until COW).  All-or-nothing: on
+        ``PoolExhausted`` no reference survives.  ``exact_ok=False``
+        (resume) shares only whole pages, since the resumed request's
+        tokens diverge inside the first partial page."""
+        ps, scratch = self.page_size, self.allocator.scratch
+        mp = self.max_len // ps
+        nb = -(-n_tokens // ps)
+        shared: List[int] = []
+        if self.prefix_registry is not None:
+            _, shared = self.prefix_registry.lookup(req.prompt,
+                                                    exact_ok=exact_ok)
+            shared = shared[:nb]
+        if shared:
+            # retain BEFORE allocating: allocation may evict the donor's
+            # registry entry, and only our reference keeps its pages alive
+            self.allocator.retain(shared)
+        try:
+            priv = self._alloc_evicting(nb - len(shared))
+        except PoolExhausted:
+            if shared:
+                self.allocator.free(shared)
+            raise
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_shared_tokens += min(len(shared) * ps, n_tokens)
+        pages = shared + priv
+        row = np.full((mp,), scratch, np.int32)
+        row[:nb] = pages
+        wrow = np.full((mp,), scratch, np.int32)
+        wrow[len(shared):nb] = priv
+        return pages, row, wrow
+
+    def _release_pages(self, req: Request) -> None:
+        """Drop a retiring/preempted request's page references and point
+        its table row back at scratch.  The stale device rows stay until
+        the pages are reallocated (and zeroed) — masking already hides
+        them, exactly as a contiguous slot's stale tail is hidden."""
+        if not self._paged:
+            return
+        pages = self._req_pages.pop(req.uid, None)
+        if pages:
+            self.allocator.free(pages)
+        if req.slot >= 0:
+            self._tables[req.slot, :] = self.allocator.scratch
+            self._tables_dirty = True
+
+    def _paged_insert(self, cache, frag, slots: Sequence[int],
+                      lens: Sequence[int], wrows) -> Any:
+        """Scatter a prefilled CONTIGUOUS fp cache fragment into pool
+        pages — the paged counterpart of `_masked_group_insert`.
+        ``wrows`` ((B, max_pages) int32) names the page each max_len block
+        of each fragment row lands in; scratch marks blocks that are not
+        this group's to write (shared prefix pages, unallocated tail) —
+        their rows land in the pool's scratch page.  Rows past each true
+        length are zeroed first (the bucketed-padding fix), so resident
+        pages never hold padding garbage; int8 pools quantize each token
+        row on the way in.  Device tables are NOT touched here — the host
+        mirror was updated by the caller and `_sync_tables` broadcasts it
+        before the next consuming jit."""
+        B = len(slots)
+        ps = self.page_size
+        mp = self.max_len // ps
+        lens_j = jnp.asarray(lens, jnp.int32)
+        wt = jnp.asarray(np.asarray(wrows, np.int32).reshape(-1))
+        slots_j = jnp.asarray(slots, jnp.int32)
+
+        frag_leaves: Dict[Any, Array] = {}
+
+        def collect(path, leaf):
+            frag_leaves[getattr(path[-1], "name", None)] = leaf
+            return leaf
+
+        jax.tree_util.tree_map_with_path(collect, frag)
+
+        def rows_for(src):
+            v = frag_leaves[src][:, :B]          # (L, B, max_len, feat...)
+            pos = jnp.arange(v.shape[2])
+            keep = (pos[None, :] < lens_j[:, None]).reshape(
+                (1, B, -1) + (1,) * (v.ndim - 3))
+            v = jnp.where(keep, v, jnp.zeros((), v.dtype))
+            v = v.reshape((v.shape[0], B, mp, ps) + v.shape[3:])
+            return v.reshape((v.shape[0], B * mp, ps) + v.shape[4:])
+
+        def ins(path, fl):
+            name = getattr(path[-1], "name", None)
+            if name in _LEN_LEAVES:
+                return fl.at[:, slots_j].set(
+                    jnp.broadcast_to(lens_j, (fl.shape[0], B)).astype(
+                        fl.dtype))
+            if name in _POOL_SRC:
+                v = rows_for(_POOL_SRC[name])
+                if self.kv_dtype == "int8":
+                    flat = v.reshape(v.shape[:3] + (-1,))
+                    xq, _ = kops.quantize_activations(
+                        flat.astype(jnp.float32))
+                    v = xq.reshape(v.shape)
+                return fl.at[:, wt].set(v.astype(fl.dtype))
+            if name in _SCALE_SRC:
+                v = rows_for(_SCALE_SRC[name])
+                flat = v.reshape(v.shape[:3] + (-1,))
+                _, sc = kops.quantize_activations(flat.astype(jnp.float32))
+                return fl.at[:, wt].set(sc[..., 0])
+            return fl
+
+        return jax.tree_util.tree_map_with_path(ins, cache)
 
     def _make_request(self, prompt: Sequence[int], max_new_tokens: int,
                       eos_id: Optional[int], priority: int,
@@ -613,6 +910,20 @@ class ServingEngine:
             groups.setdefault(bucket if batch_safe else (bucket, i),
                               []).append(i)
 
+        # Paged: reserve every request's pages up front (shared prefix
+        # pages from the registry, fresh ones from the pool), so a late
+        # PoolExhausted cannot leave half the batch admitted — unwind and
+        # re-raise with no reference leaked.
+        plans: Dict[int, Any] = {}
+        if self._paged:
+            try:
+                for req in reqs:
+                    plans[req.uid] = self._plan_pages(req, len(req.prompt))
+            except PoolExhausted:
+                for pages, _, _ in plans.values():
+                    self.allocator.free(pages)
+                raise
+
         for key, idxs in groups.items():
             bucket = key if batch_safe else key[0]
             B = len(idxs)
@@ -645,13 +956,31 @@ class ServingEngine:
             firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             nf_h = np.asarray(nf) if nf is not None else None
             slots = [self.free.pop(0) for _ in idxs]
-            self.cache = _masked_group_insert(
-                self.cache, cache_b, slots, lens[:B].tolist(),
-                self.bucketing.enabled)
-            if self.spec is not None:
-                self.draft_cache = _masked_group_insert(
-                    self.draft_cache, dcache_b, slots, lens[:B].tolist(),
+            if self._paged:
+                true_lens = lens[:B].tolist()
+                wrows = np.stack([plans[reqs[i].uid][2] for i in idxs])
+                self.cache = self._paged_insert(self.cache, cache_b, slots,
+                                                true_lens, wrows)
+                if self.spec is not None:
+                    self.draft_cache = self._paged_insert(
+                        self.draft_cache, dcache_b, slots, true_lens, wrows)
+                for r, i in enumerate(idxs):
+                    req = reqs[i]
+                    pages, row, _ = plans[req.uid]
+                    self._tables[slots[r]] = row
+                    self._req_pages[req.uid] = list(pages)
+                    if self.prefix_registry is not None:
+                        self.prefix_registry.register(req.prompt, pages)
+                    self._note_page_peaks(req)
+                self._tables_dirty = True
+            else:
+                self.cache = _masked_group_insert(
+                    self.cache, cache_b, slots, lens[:B].tolist(),
                     self.bucketing.enabled)
+                if self.spec is not None:
+                    self.draft_cache = _masked_group_insert(
+                        self.draft_cache, dcache_b, slots, lens[:B].tolist(),
+                        self.bucketing.enabled)
             self._repin_cache()
             for r, i in enumerate(idxs):
                 req = reqs[i]
@@ -680,6 +1009,14 @@ class ServingEngine:
         P, toks = req.prompt, req.tokens
         n = len(P)
         fill = n + len(toks) - 1
+        # Paged: reserve the resumed fill's pages BEFORE any replay work —
+        # PoolExhausted must leave the request untouched (still QUEUED) so
+        # _pump_queue can park it at the queue front.  Only whole prefix
+        # pages are shared (exact_ok=False): the replayed decode writes
+        # land strictly past them.
+        plan = None
+        if self._paged:
+            plan = self._plan_pages(req, fill, exact_ok=False)
         bucket = self.bucketing.bucket_for(n)
         ta = np.zeros((1, bucket), np.int32)
         ta[0, :n] = P
@@ -712,11 +1049,23 @@ class ServingEngine:
                     _, dcache_b = self._draft_decode(self.draft_params, tok,
                                                      dcache_b)
         slot = self.free.pop(0)
-        self.cache = _masked_group_insert(self.cache, cache_b, [slot],
-                                          [fill], False)
-        if self.spec is not None:
-            self.draft_cache = _masked_group_insert(
-                self.draft_cache, dcache_b, [slot], [fill], False)
+        if self._paged:
+            pages, row, wrow = plan
+            self.cache = self._paged_insert(self.cache, cache_b, [slot],
+                                            [fill], wrow[None])
+            if self.spec is not None:
+                self.draft_cache = self._paged_insert(
+                    self.draft_cache, dcache_b, [slot], [fill], wrow[None])
+            self._tables[slot] = row
+            self._req_pages[req.uid] = list(pages)
+            self._tables_dirty = True
+            self._note_page_peaks(req)
+        else:
+            self.cache = _masked_group_insert(self.cache, cache_b, [slot],
+                                              [fill], False)
+            if self.spec is not None:
+                self.draft_cache = _masked_group_insert(
+                    self.draft_cache, dcache_b, [slot], [fill], False)
         self._repin_cache()
         req.slot = slot
         req.transition(RequestState.RUNNING)
@@ -733,6 +1082,7 @@ class ServingEngine:
         if diagnostics is not None:
             req.diagnostics = diagnostics
         req.transition(state)
+        self._release_pages(req)
         if req.slot >= 0:
             self.free.append(req.slot)
             req.slot = -1
@@ -796,6 +1146,7 @@ class ServingEngine:
             req.preemptions += 1
             self.preemptions += 1
             del self.active[req.uid]
+            self._release_pages(req)
             self.free.append(req.slot)
             req.slot = -1
         lens = np.zeros((self.n_slots,), np.int32)
@@ -810,6 +1161,92 @@ class ServingEngine:
         for req in victims:
             req.transition(RequestState.QUEUED)
             self.queue.push_front(req)
+
+    def _alloc_decode_page(self, req: Request) -> int:
+        """One fresh page for a running request's next K/V write: evict
+        registry entries first, then preempt victims (policy and family
+        permitting) until the pool yields a page; ``PoolExhausted``
+        propagates when nothing preemptible remains."""
+        while True:
+            try:
+                page = self._alloc_evicting(1)[0]
+                self._note_page_peaks()
+                return page
+            except PoolExhausted:
+                victims = [r for r in self._victim_order()
+                           if r.uid != req.uid]
+                if (victims and self._preemptible
+                        and self.on_pressure == "preempt"):
+                    self._preempt(victims[:1], reason="pool_exhausted")
+                    continue
+                raise
+
+    def _reserve_blocks(self, req: Request, horizon: int,
+                        cow: List, fresh: List) -> None:
+        """Make every table block the next ``horizon`` K/V writes of this
+        request touch PRIVATE and allocated: scratch blocks get fresh
+        pages (queued in ``fresh`` for zeroing), shared blocks (refcount >
+        1) are replaced by private copies (queued in ``cow``) with the
+        shared reference dropped — copy-on-write at the first write into
+        shared territory.  Entries are uid-tagged: a preemption triggered
+        by a LATER allocation may free and recycle pages queued earlier,
+        and the caller filters stale entries by current ownership."""
+        ps, scratch = self.page_size, self.allocator.scratch
+        fill = self._fill(req)
+        lo = fill // ps
+        hi = min(fill + horizon - 1, self.max_len - 1) // ps
+        s = req.slot
+        pages = self._req_pages.setdefault(req.uid, [])
+        for b in range(lo, hi + 1):
+            pid = int(self._tables[s, b])
+            if pid == scratch:
+                new = self._alloc_decode_page(req)
+                self._tables[s, b] = new
+                pages.append(new)
+                fresh.append((req.uid, new))
+                self._tables_dirty = True
+            elif self.allocator.refcount(pid) > 1:
+                new = self._alloc_decode_page(req)
+                self.allocator.free([pid])
+                self._tables[s, b] = new
+                pages[pages.index(pid)] = new
+                cow.append((req.uid, pid, new))
+                self.cow_copies += 1
+                self._tables_dirty = True
+        self._note_page_peaks(req)
+
+    def _ensure_capacity(self, horizon: int) -> None:
+        """Pre-step page reservation: every block the next ``horizon`` K/V
+        writes touch must be private and allocated BEFORE the jit runs (the
+        jit routes out-of-table writes to the scratch page — data loss, not
+        corruption, but still loss).  Under exhaustion the starved request
+        is retired TRUNCATED with diagnostics — typed, observable
+        backpressure, never a silent clamp."""
+        if not self._paged or not self.active:
+            return
+        cow: List = []
+        fresh: List = []
+        for uid in sorted(self.active):
+            req = self.active.get(uid)
+            if req is None:      # preempted by an earlier iteration's alloc
+                continue
+            try:
+                self._reserve_blocks(req, horizon, cow, fresh)
+            except PoolExhausted:
+                self._retire(req, RequestState.TRUNCATED, diagnostics={
+                    "kind": "pool_exhausted",
+                    "pages_in_use": self.allocator.pages_in_use,
+                    "n_pages": self.allocator.n_pages,
+                    "engine_step": self.engine_steps})
+        # a preemption mid-loop may have freed (and recycled) queued pages;
+        # only zero/copy pages their planner still owns
+        own = {u: set(p) for u, p in self._req_pages.items()}
+        zs = [p for u, p in fresh if p in own.get(u, ())]
+        pairs = [(o, n) for u, o, n in cow if n in own.get(u, ())]
+        if zs:
+            self._zero_pages(zs)
+        if pairs:
+            self._copy_pages(pairs)
 
     def _admissible(self, req: Request, limit: int) -> bool:
         """A queued request may take a slot only if its (prospective) fill
@@ -879,11 +1316,21 @@ class ServingEngine:
             if req is None:
                 break
             if req.tokens:
-                self._admit_resume(req)
+                try:
+                    self._admit_resume(req)
+                except PoolExhausted:
+                    # page-pool backpressure: the resume waits its turn at
+                    # the queue front; pages drain as running work retires
+                    self.queue.push_front(req)
+                    break
             else:
                 fresh.append(req)
         if fresh:
-            self._admit(fresh)
+            try:
+                self._admit(fresh)
+            except PoolExhausted:
+                for r in reversed(fresh):
+                    self.queue.push_front(r)
 
     def _tick(self) -> None:
         """Per-step lifecycle prologue.  A planned transient fault raises
@@ -932,6 +1379,17 @@ class ServingEngine:
                 # or queued-but-inadmissible work would livelock
                 self.engine_steps += 1
             return {}
+        if self._paged:
+            # reserve (zeroed, private) pages for every K/V write this
+            # step will issue — one for vanilla decode, the whole window
+            # for speculation — then push the dirty table mirror
+            self._ensure_capacity(1 if self.spec is None
+                                  else self.spec.gamma + 1)
+            if not self.active:
+                if len(self.queue):
+                    self.engine_steps += 1
+                return {}
+            self._sync_tables()
         if self.spec is not None:
             return self._spec_step()
         toks = jnp.asarray(self.last_token, jnp.int32)
@@ -1116,6 +1574,47 @@ class ServingEngine:
                           for st in sorted(TERMINAL_STATES,
                                            key=lambda s: s.value)},
         }
+        if self._paged:
+            # HBM accounting straight off the live pool leaves: bytes per
+            # page (all layers, pools + scales) x pool occupancy, next to
+            # what the contiguous fp layout would have pinned per slot.
+            ps = self.page_size
+            per_page = 0
+            per_tok_fp = 0
+            fp_size = jnp.zeros((), self._cache_dtype).dtype.itemsize
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                    self.cache)[0]:
+                name = getattr(path[-1], "name", None)
+                if name in _POOL_SRC:
+                    feat = int(np.prod(leaf.shape[3:])) if leaf.ndim > 3 else 1
+                    per_page += (leaf.shape[0] * ps * feat
+                                 * leaf.dtype.itemsize)
+                    per_tok_fp += leaf.shape[0] * feat * fp_size
+                elif name in _SCALE_SRC:
+                    per_page += leaf.shape[0] * ps * leaf.dtype.itemsize
+            out["paged"] = {
+                "page_size": ps,
+                "n_pages": self.allocator.n_pages,
+                "pages_in_use": self.allocator.pages_in_use,
+                "pages_free": self.allocator.n_free,
+                "pool_utilization": (self.allocator.pages_in_use
+                                     / self.allocator.n_pages),
+                "peak_pages_in_use": self.peak_pages_in_use,
+                "peak_pages_per_request": self.peak_pages_per_request,
+                "kv_dtype": self.kv_dtype or str(self._cache_dtype),
+                "bytes_per_page": per_page,
+                "bytes_resident": self.allocator.pages_in_use * per_page,
+                "bytes_pool": self.allocator.n_pages * per_page,
+                "bytes_contiguous_fp": (self.n_slots * self.max_len
+                                        * per_tok_fp),
+                "prefix_hits": self.prefix_hits,
+                "prefix_shared_tokens": self.prefix_shared_tokens,
+                "cow_copies": self.cow_copies,
+                "page_evictions": self.page_evictions,
+                "registry_entries": (len(self.prefix_registry)
+                                     if self.prefix_registry is not None
+                                     else 0),
+            }
         if self.spec is not None:
             out.update({
                 "spec_gamma": self.spec.gamma,

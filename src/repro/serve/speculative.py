@@ -23,6 +23,11 @@ Window protocol (γ = SpecConfig.gamma, per engine step):
             g_{k+1} — between 1 and γ+1 tokens per window.
   rollback  both caches rewind to fill + accepted (masked K/V tail
             zeroing + fill-counter rewind, `engine._rollback_tail`).
+            Paged caches rewind by fill counter alone — page tables and
+            pool rows are untouched (the rejected tail's rows stay in
+            their pages, hidden by the mask and overwritten by the next
+            window), which is why the same rollback jit serves both
+            layouts.
 
 Quarantine inside a window (engine ``guards=True``): a non-finite verify
 row means NO token of that window can be trusted for that slot — the

@@ -153,6 +153,81 @@ print("draft sharded units:", n_sharded)
 """, devices=8, timeout=1200)
 
 
+def test_mesh_paged_decode_parity(subproc):
+    """Paged KV cache on a 2x4 (data x model) mesh: pool pages shard over
+    "data" (and kp/vp heads over "model"), tables replicate, and decode
+    tokens stay bit-identical to the single-device CONTIGUOUS engine —
+    the paged-parity claim and the shard-parity claim composed.  Also
+    exercises preempt/resume on the mesh so the jitted slot clear, the
+    host-side page release, and the batch-1 replay reinsert all run with
+    sharded pool leaves."""
+    subproc("""
+import dataclasses
+import jax
+from repro.configs import get_smoke_config
+from repro.models import api
+from repro.serve import ServingEngine
+
+cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                          n_layers=2)
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+def serve(eng, prompts, max_new=6):
+    uids = eng.add_requests(prompts, max_new_tokens=max_new)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    return [fin[u].tokens for u in uids]
+
+wave1 = [[1, 2, 3], [4, 5, 6, 7, 8, 9], [10, 11, 12, 13, 14, 15, 16, 17, 18],
+         [20, 21]]
+wave2 = [[7, 7, 7, 7, 7], [9, 8, 7]]          # slot + page reuse
+
+# ground truth: single-device CONTIGUOUS fp engine
+eng0 = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                     prepare=False)
+t0 = serve(eng0, wave1) + serve(eng0, wave2)
+
+# kv_pages=31 -> pool leaves carry 32 page rows (31 + scratch), which the
+# data=2 axis splits evenly; default capacity (4*64/8=32 pages -> 33 rows)
+# would not.
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+paged_kw = dict(kv_layout="paged", page_size=8, kv_pages=31)
+eng = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                    prepare=False, mesh=mesh, **paged_kw)
+t = serve(eng, wave1) + serve(eng, wave2)
+assert t == t0, (t, t0)
+
+# the engine's declared placement: page axis over "data", kp/vp heads
+# over "model"; the page tables replicate (any slot may name any page).
+# Checked on _cache_shardings, the pins every insert restores — live
+# leaves may carry whatever output sharding the decode jit propagated.
+flat = jax.tree_util.tree_flatten_with_path(eng._cache_shardings)[0]
+specs = {jax.tree_util.keystr(p): tuple(sh.spec) for p, sh in flat}
+kp = [s for p, s in specs.items() if p.endswith(".kp")]
+assert kp and all(s[1] == "data" and "model" in s for s in kp), specs
+tables = [s for p, s in specs.items() if p.endswith(".table")]
+assert tables and all(all(e is None for e in s) for s in tables), specs
+
+# preempt/resume with sharded pages: release + replay stays bitwise
+eng2 = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                     prepare=False, mesh=mesh, **paged_kw)
+uids = eng2.add_requests(wave1, max_new_tokens=6)
+for _ in range(2):
+    eng2.step()
+eng2.set_cache_pressure(4)          # every fill >= 4 now -> all preempt
+eng2.step()
+assert eng2.stats()["preemptions"] == 4 and not eng2.active
+assert not eng2._req_pages          # preemption released every page
+eng2.set_cache_pressure(None)
+eng2.run_to_completion()
+fin = eng2.take_finished()
+assert [fin[u].tokens for u in uids] == t0[:4]
+assert eng2.stats()["resumes"] == 4
+print("mesh paged parity OK: tokens bitwise, pages sharded over data,"
+      " 4 preempted/resumed")
+""", devices=8, timeout=900)
+
+
 def test_sharded_engine_token_parity_and_weight_residency(subproc):
     subproc("""
 import dataclasses

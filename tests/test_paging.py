@@ -1,0 +1,156 @@
+"""Page allocator / prefix registry pure units — no JAX, no engine.
+
+The allocator is the single host-side authority over physical pages
+(serve/paging.py); these tests pin its contract: all-or-nothing
+allocation with typed ``PoolExhausted`` backpressure, refcounted
+sharing, FIFO free-list reuse (determinism is load-bearing for the
+paged-vs-contiguous parity suite), copy-on-write semantics, and the
+prefix registry's whole-page sharing rules.
+"""
+import pytest
+
+from repro.serve.paging import PageAllocator, PoolExhausted, PrefixRegistry
+from repro.serve import AdmissionRejected
+
+
+# ----------------------------------------------------------------- allocator
+
+def test_alloc_free_roundtrip():
+    a = PageAllocator(n_pages=4, page_size=8)
+    assert a.scratch == 4 and a.n_free == 4 and a.pages_in_use == 0
+    pages = a.alloc(3)
+    assert pages == [0, 1, 2]
+    assert a.pages_in_use == 3 and a.n_free == 1
+    assert all(a.refcount(p) == 1 for p in pages)
+    a.free(pages)
+    assert a.pages_in_use == 0 and all(a.refcount(p) == 0 for p in pages)
+
+
+def test_alloc_all_or_nothing_raises_typed_backpressure():
+    a = PageAllocator(n_pages=3, page_size=8)
+    a.alloc(2)
+    with pytest.raises(PoolExhausted):
+        a.alloc(2)
+    # failed alloc must leave the pool untouched
+    assert a.n_free == 1
+    assert a.alloc(1) == [2]
+    # PoolExhausted IS an AdmissionRejected: pool pressure rides the
+    # engine's existing backpressure path unchanged
+    assert issubclass(PoolExhausted, AdmissionRejected)
+
+
+def test_free_list_reuse_is_fifo_deterministic():
+    a = PageAllocator(n_pages=4, page_size=8)
+    first = a.alloc(4)
+    a.free([first[1], first[3]])       # free 1 then 3
+    a.free([first[0]])                 # then 0
+    # FIFO: reuse order is exactly the order pages were freed
+    assert a.alloc(3) == [1, 3, 0]
+
+    # identical admit/retire/admit cycles reproduce identical page ids
+    b1, b2 = PageAllocator(8, 4), PageAllocator(8, 4)
+    for b in (b1, b2):
+        x = b.alloc(3)
+        b.free(x[::-1])
+        b.alloc(2)
+    assert b1._free == b2._free and b1._refs == b2._refs
+
+
+def test_refcount_shared_pages_survive_partial_release():
+    a = PageAllocator(n_pages=2, page_size=8)
+    (p,) = a.alloc(1)
+    a.retain([p])
+    a.retain([p])
+    assert a.refcount(p) == 3
+    a.free([p])
+    a.free([p])
+    assert a.refcount(p) == 1 and a.pages_in_use == 1
+    a.free([p])
+    assert a.refcount(p) == 0 and a.n_free == 2
+
+
+def test_refcount_misuse_raises():
+    a = PageAllocator(n_pages=2, page_size=8)
+    with pytest.raises(ValueError):
+        a.retain([0])                  # never allocated
+    with pytest.raises(ValueError):
+        a.free([1])
+    (p,) = a.alloc(1)
+    a.free([p])
+    with pytest.raises(ValueError):
+        a.free([p])                    # double free
+
+
+def test_writable_cow_semantics():
+    a = PageAllocator(n_pages=3, page_size=8)
+    (p,) = a.alloc(1)
+    # sole holder: write in place, nothing allocated
+    page, fresh = a.writable(p)
+    assert page == p and fresh is False and a.pages_in_use == 1
+    # shared: fresh page, one reference dropped from the shared one
+    a.retain([p])
+    page, fresh = a.writable(p)
+    assert fresh is True and page != p
+    assert a.refcount(p) == 1 and a.refcount(page) == 1
+    with pytest.raises(ValueError):
+        a.writable(99)
+
+
+# ------------------------------------------------------------ prefix registry
+
+def test_registry_exact_match_shares_all_pages():
+    a = PageAllocator(n_pages=8, page_size=4)
+    reg = PrefixRegistry(a)
+    prompt = list(range(10))           # 10 tokens -> 3 pages
+    pages = a.alloc(3)
+    assert reg.register(prompt, pages) is True
+    assert all(a.refcount(p) == 2 for p in pages)   # holder + registry
+    shared, got = reg.lookup(prompt)
+    assert shared == 10 and got == pages
+    # exact_ok=False: whole pages only, even on an exact match
+    shared, got = reg.lookup(prompt, exact_ok=False)
+    assert shared == 8 and got == pages[:2]
+
+
+def test_registry_lcp_rounds_down_to_whole_pages():
+    a = PageAllocator(n_pages=8, page_size=4)
+    reg = PrefixRegistry(a)
+    donor = list(range(10))
+    pages = a.alloc(3)
+    reg.register(donor, pages)
+    # diverges at token 9: LCP 9 -> 2 whole pages (8 tokens)
+    shared, got = reg.lookup(donor[:9] + [99, 100])
+    assert shared == 8 and got == pages[:2]
+    # diverges inside the first page: nothing shareable
+    shared, got = reg.lookup([99] + donor[1:])
+    assert shared == 0 and got == []
+
+
+def test_registry_skips_short_and_duplicate_prompts():
+    a = PageAllocator(n_pages=8, page_size=4)
+    reg = PrefixRegistry(a)
+    (p,) = a.alloc(1)
+    assert reg.register([1, 2, 3], [p]) is False    # < one page
+    assert a.refcount(p) == 1                       # no ref taken
+    pages = a.alloc(2)
+    assert reg.register([1, 2, 3, 4, 5], pages) is True
+    assert reg.register([1, 2, 3, 4, 5], pages) is False
+    assert all(a.refcount(q) == 2 for q in pages)   # retained ONCE
+
+
+def test_registry_eviction_releases_only_unpinned_pages():
+    a = PageAllocator(n_pages=4, page_size=4)
+    reg = PrefixRegistry(a)
+    pages = a.alloc(2)
+    reg.register(list(range(8)), pages)
+    a.free(pages)                      # the "request" retires
+    assert len(reg) == 1 and a.pages_in_use == 2    # registry still pins
+    assert reg.evict_one() is True
+    assert a.pages_in_use == 0                      # now reclaimed
+    assert reg.evict_one() is False                 # empty
+
+    # a page still pinned by a live holder survives its entry's eviction
+    pages = a.alloc(2)
+    reg.register(list(range(100, 108)), pages)
+    reg.evict_one()
+    assert all(a.refcount(p) == 1 for p in pages)   # holder's ref intact
