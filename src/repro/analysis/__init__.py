@@ -1,0 +1,17 @@
+"""Hot-path contract checker: rule-based static analysis over compiled
+HLO artifacts, jit trace behaviour, and the repo's Python AST.
+
+See DESIGN.md §12 for the rule catalog and how to add a rule.  Importing
+this package registers every shipped rule in ``REGISTRY``.
+"""
+from .core import (ContractViolation, Finding, REGISTRY, Report, Rule,
+                   Severity, all_rules, register, run_rules)
+from .hlo_rules import HLO_RULES
+from .trace_rules import TRACE_RULES, TraceSentinel
+from .ast_rules import AST_RULES, ast_context
+
+__all__ = [
+    "AST_RULES", "ContractViolation", "Finding", "HLO_RULES", "REGISTRY",
+    "Report", "Rule", "Severity", "TRACE_RULES", "TraceSentinel",
+    "all_rules", "ast_context", "register", "run_rules",
+]

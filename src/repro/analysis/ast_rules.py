@@ -1,0 +1,374 @@
+"""Repo-level AST rules: a flake8-style pass over the Python source.
+
+These rules parse files with the stdlib ``ast`` module — no imports of
+the code under scan, no new dependencies — and enforce the serving
+hygiene contracts that do not show up in any single compiled artifact:
+
+  * AST-IM1: no device work at import time.  Module-scope calls into
+    ``jnp.*`` / ``jax.random.*`` / ``jax.device_put`` allocate buffers and
+    pick a backend before the launcher configures the mesh.
+  * AST-JT1: no Python side effects inside jitted functions, except the
+    registered trace counters (``global <name>_traces``-style bumps the
+    engine and kernels deliberately use to count retraces).
+  * AST-HS1: no host sync inside jitted functions: ``.item()`` /
+    ``float()`` / ``int()`` / ``bool()`` on traced values blocks on the
+    device and breaks tracing.
+  * AST-DT1: deterministic serve/fault paths take no wall-clock and no
+    unseeded RNG: replayable scheduling (PR 6) dies the moment a code
+    path consults ``time.time()`` or ``random.random()`` directly.
+
+Suppression: a line ending in a comment containing ``contract: ok``
+(e.g. ``# contract: ok — eager path``) is exempt from all AST rules;
+suppressions are collected per file before the AST walk since ``ast``
+drops comments.
+
+Jitted functions are detected syntactically: decorated with ``jax.jit``
+/ ``jit`` / ``functools.partial(jax.jit, ...)``, or any function whose
+name is later wrapped in a visible ``jax.jit(...)`` call in the same
+file.  That is deliberately conservative — rules only fire on code that
+is *provably* inside a trace.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import tokenize
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import Finding, Rule, Severity, register
+
+# Side-effect counters the engine/kernels legitimately bump inside traced
+# Python: tracing counters (run once per *trace*, which is the point) and
+# the kernel launch counter.  Names ending in "_traces" are the engine's
+# per-jit counters; "launch_count" is the pallas kernel's.
+REGISTERED_COUNTERS: Tuple[str, ...] = ("launch_count",)
+
+
+def _counter_ok(name: str) -> bool:
+    return name.endswith("_traces") or name in REGISTERED_COUNTERS
+
+
+def _dotted(node: ast.AST) -> str:
+    """Render an attribute/name chain like ``jax.random.uniform``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _suppressed_lines(source: str) -> Set[int]:
+    out: Set[int] = set()
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT and "contract: ok" in tok.string:
+                out.add(tok.start[0])
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    name = _dotted(dec)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        callee = _dotted(dec.func)
+        if callee in ("jax.jit", "jit"):
+            return True
+        # functools.partial(jax.jit, static_argnames=...)
+        if callee in ("functools.partial", "partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _jit_wrapped_names(tree: ast.Module) -> Set[str]:
+    """Function names passed to a visible ``jax.jit(...)`` call anywhere
+    in the file (covers ``self._decode = jax.jit(decode_fn, ...)``)."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "jax.jit", "jit"):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+    return names
+
+
+def _jitted_functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    wrapped = _jit_wrapped_names(tree)
+    out: List[ast.FunctionDef] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if (any(_is_jit_decorator(d) for d in node.decorator_list)
+                    or node.name in wrapped):
+                out.append(node)
+    return out
+
+
+class _File:
+    """Parsed unit handed to each AST rule."""
+
+    def __init__(self, path: Path, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.suppressed = _suppressed_lines(source)
+        self.jitted = _jitted_functions(self.tree)
+
+    def loc(self, node: ast.AST) -> str:
+        return f"{self.path}:{getattr(node, 'lineno', '?')}"
+
+    def ok(self, node: ast.AST) -> bool:
+        return getattr(node, "lineno", -1) in self.suppressed
+
+
+def _iter_files(paths: Iterable[Path]) -> List[_File]:
+    out: List[_File] = []
+    for root in paths:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for p in files:
+            try:
+                out.append(_File(p, p.read_text()))
+            except (SyntaxError, UnicodeDecodeError, OSError):
+                continue
+    return out
+
+
+_DEVICE_PREFIXES = ("jnp.", "jax.numpy.", "jax.random.")
+_DEVICE_CALLS = ("jax.device_put", "jax.devices", "jax.local_devices")
+
+
+class NoImportTimeDeviceWork(Rule):
+    id = "AST-IM1"
+    severity = Severity.ERROR
+    invariant = ("no module-scope jnp./jax.random./device work: import "
+                 "must not allocate buffers or pick a backend before the "
+                 "launcher configures the mesh")
+    origin = "PR 3"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        files: Optional[List[_File]] = ctx.get("files")
+        if files is None:
+            return None
+        out: List[Finding] = []
+        for f in files:
+            for node in self._module_scope_calls(f.tree):
+                if f.ok(node):
+                    continue
+                name = _dotted(node.func)
+                if (name.startswith(_DEVICE_PREFIXES)
+                        or name in _DEVICE_CALLS):
+                    out.append(self.finding(
+                        f"device work at import time: {name}(...)",
+                        subject=f.loc(node), call=name))
+        return out
+
+    @staticmethod
+    def _module_scope_calls(tree: ast.Module) -> List[ast.Call]:
+        """Calls at module scope, descending into if/try blocks but not
+        into function or class-method bodies (class-level constants DO
+        execute at import, so descend into ClassDef)."""
+        out: List[ast.Call] = []
+        stack: List[ast.AST] = list(tree.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if isinstance(node, ast.Call):
+                out.append(node)
+            stack.extend(ast.iter_child_nodes(node))
+        return out
+
+
+class NoJitSideEffects(Rule):
+    id = "AST-JT1"
+    severity = Severity.ERROR
+    invariant = ("no Python side effects inside jitted fns except "
+                 "registered trace counters: a global/nonlocal write, "
+                 "print, or list mutation runs per-trace, not per-call")
+    origin = "PR 2"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        files: Optional[List[_File]] = ctx.get("files")
+        if files is None:
+            return None
+        out: List[Finding] = []
+        for f in files:
+            for fn in f.jitted:
+                out.extend(self._scan_fn(f, fn))
+        return out
+
+    def _scan_fn(self, f: _File, fn: ast.FunctionDef) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if f.ok(node):
+                continue
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                bad = [n for n in node.names if not _counter_ok(n)]
+                if bad:
+                    out.append(self.finding(
+                        f"global/nonlocal write to {bad} inside jitted "
+                        f"{fn.name}() (only registered trace counters "
+                        f"may be bumped)",
+                        subject=f.loc(node), names=bad, fn=fn.name))
+            elif isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                if name == "print":
+                    out.append(self.finding(
+                        f"print() inside jitted {fn.name}() runs only at "
+                        f"trace time (use jax.debug.print)",
+                        subject=f.loc(node), fn=fn.name))
+        return out
+
+
+_HOST_SYNC_BUILTINS = ("float", "int", "bool")
+
+
+class NoHostSyncInJit(Rule):
+    id = "AST-HS1"
+    severity = Severity.ERROR
+    invariant = ("no .item()/float()/int()/bool() on traced values inside "
+                 "jitted fns: host sync blocks the device and fails under "
+                 "tracing")
+    origin = "PR 6"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        files: Optional[List[_File]] = ctx.get("files")
+        if files is None:
+            return None
+        out: List[Finding] = []
+        for f in files:
+            for fn in f.jitted:
+                static = self._static_names(fn)
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call) or f.ok(node):
+                        continue
+                    if (isinstance(node.func, ast.Attribute)
+                            and node.func.attr == "item"
+                            and not node.args):
+                        out.append(self.finding(
+                            f".item() inside jitted {fn.name}()",
+                            subject=f.loc(node), fn=fn.name))
+                        continue
+                    name = _dotted(node.func)
+                    if (name in _HOST_SYNC_BUILTINS and len(node.args) == 1
+                            and self._traced_operand(node.args[0], static)):
+                        out.append(self.finding(
+                            f"{name}() on a possibly-traced value inside "
+                            f"jitted {fn.name}()",
+                            subject=f.loc(node), fn=fn.name, builtin=name))
+        return out
+
+    @staticmethod
+    def _static_names(fn: ast.FunctionDef) -> Set[str]:
+        """Names that are static under the jit: any name fed from
+        ``.shape``/``len()``/constants within the function, plus args
+        named like static config (heuristic: we only need to avoid
+        false positives on shape math)."""
+        static: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                names: List[str] = []
+                if isinstance(tgt, ast.Name):
+                    names = [tgt.id]
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    names = [e.id for e in tgt.elts
+                             if isinstance(e, ast.Name)]
+                if names and NoHostSyncInJit._static_expr(node.value):
+                    static.update(names)
+        return static
+
+    @staticmethod
+    def _static_expr(node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "shape", "ndim", "dtype", "size"):
+            return True
+        if isinstance(node, ast.Call):
+            return _dotted(node.func) == "len"
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.BinOp):
+            return (NoHostSyncInJit._static_expr(node.left)
+                    and NoHostSyncInJit._static_expr(node.right))
+        if isinstance(node, ast.Subscript):
+            return NoHostSyncInJit._static_expr(node.value)
+        return False
+
+    @staticmethod
+    def _traced_operand(node: ast.AST, static: Set[str]) -> bool:
+        """True when the operand may be traced: not a literal, not shape
+        arithmetic, not a name previously assigned from shape math."""
+        if NoHostSyncInJit._static_expr(node):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id not in static
+        if isinstance(node, ast.BinOp):
+            return (NoHostSyncInJit._traced_operand(node.left, static)
+                    or NoHostSyncInJit._traced_operand(node.right, static))
+        return True
+
+
+_WALLCLOCK_CALLS = ("time.time", "time.monotonic", "time.perf_counter",
+                    "datetime.datetime.now", "datetime.now")
+_UNSEEDED_RNG = ("random.random", "random.randint", "random.choice",
+                 "random.shuffle", "random.uniform", "np.random.rand",
+                 "np.random.randn", "np.random.randint",
+                 "numpy.random.rand", "numpy.random.randn")
+
+
+class ServeDeterminism(Rule):
+    id = "AST-DT1"
+    severity = Severity.ERROR
+    invariant = ("deterministic serve/fault paths call no wall-clock and "
+                 "no unseeded global RNG: scheduling must replay from the "
+                 "seed alone (injected clocks / named Generators only)")
+    origin = "PR 6"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        files: Optional[List[_File]] = ctx.get("files")
+        scope: Optional[str] = ctx.get("determinism_scope")
+        if files is None or scope is None:
+            return None
+        out: List[Finding] = []
+        for f in files:
+            if scope not in str(f.path):
+                continue
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call) or f.ok(node):
+                    continue
+                name = _dotted(node.func)
+                if name in _WALLCLOCK_CALLS:
+                    out.append(self.finding(
+                        f"wall-clock call {name}() in deterministic "
+                        f"serve path (inject a clock instead)",
+                        subject=f.loc(node), call=name))
+                elif name in _UNSEEDED_RNG:
+                    out.append(self.finding(
+                        f"unseeded global RNG {name}() in deterministic "
+                        f"serve path (use a seeded np.random.Generator)",
+                        subject=f.loc(node), call=name))
+        return out
+
+
+NO_IMPORT_DEVICE_WORK = register(NoImportTimeDeviceWork())
+NO_JIT_SIDE_EFFECTS = register(NoJitSideEffects())
+NO_HOST_SYNC_IN_JIT = register(NoHostSyncInJit())
+SERVE_DETERMINISM = register(ServeDeterminism())
+
+AST_RULES = [NO_IMPORT_DEVICE_WORK, NO_JIT_SIDE_EFFECTS,
+             NO_HOST_SYNC_IN_JIT, SERVE_DETERMINISM]
+
+
+def ast_context(paths: Iterable[Path],
+                determinism_scope: str = "repro/serve") -> Dict[str, Any]:
+    """Build the ctx dict the AST rules consume from a set of paths."""
+    return {"files": _iter_files(paths),
+            "determinism_scope": determinism_scope}

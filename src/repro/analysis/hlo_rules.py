@@ -1,0 +1,255 @@
+"""Compiled-artifact rules: invariants checked on the lowered/compiled HLO
+of the serving engine's actual jits (decode, prefill buckets, spec verify,
+rollback).
+
+Context keys consumed (all optional unless a rule says otherwise; a rule
+whose keys are absent returns None = skipped):
+
+  * ``hlo``: {name: compiled_hlo_text} — the artifacts under test.
+  * ``dense_hlo``: {name: text} — dense-baseline artifacts for the
+    gather-parity rule (same jit lowered over the dequantized twin).
+  * ``plan``: plan-tree stats from ``artifacts.plan_stats``:
+    {"has_plans", "n_permuted_groups", "max_bk", "bm", "itemsize"}.
+  * ``weight_shard_bytes``: largest sharded plan-plane payload in bytes
+    (None / absent on single-device engines -> collective rules skip).
+  * ``collective_budget_bytes``: per-instruction collective result budget
+    (defaults to ``weight_shard_bytes``).
+  * ``pool_slice_elems``: one layer's int8 page-pool slice element count
+    (absent unless the engine holds int8 resident pages).
+  * ``cache_leaf_bytes``: largest cache leaf in bytes (whole-cache-copy
+    audit).
+  * ``donation_expected``: bool — platform supports buffer donation and
+    the engine intends to donate its cache into the step jits.
+
+The HLO parsing itself lives in ``repro.dist.hlo_analysis`` — these rules
+only interpret its structured output, so tests and the engine share one
+parser.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.dist import hlo_analysis as H
+
+from .core import Finding, Rule, Severity, register
+
+
+class NoWeightAllGather(Rule):
+    id = "HLO-AG1"
+    severity = Severity.ERROR
+    invariant = ("no all-gather in a compiled serving step has a "
+                 "weight-shard-sized result: decode moves activations "
+                 "between shards, never the sharded CLAQ plan payload")
+    origin = "PR 3"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        threshold = ctx.get("weight_shard_bytes")
+        hlo = ctx.get("hlo")
+        if not hlo or threshold is None:
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            big = [b for kind, b in H.collective_instructions(text)
+                   if kind == "all-gather" and b >= threshold]
+            if big:
+                out.append(self.finding(
+                    f"weight-sized all-gather in compiled {name}: "
+                    f"{sorted(big, reverse=True)[:4]} B vs largest sharded "
+                    f"plane {threshold} B",
+                    subject=name, bytes=sorted(big, reverse=True),
+                    threshold=threshold))
+        return out
+
+
+class CollectiveBudget(Rule):
+    id = "HLO-CB1"
+    severity = Severity.ERROR
+    invariant = ("every collective instruction in a compiled serving step "
+                 "stays under the per-instruction byte budget (activations "
+                 "are small; anything bigger is a sharding regression)")
+    origin = "PR 3"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        budget = ctx.get("collective_budget_bytes",
+                         ctx.get("weight_shard_bytes"))
+        hlo = ctx.get("hlo")
+        if not hlo or budget is None:
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            over = [(kind, b) for kind, b in H.collective_instructions(text)
+                    if b >= budget]
+            if over:
+                out.append(self.finding(
+                    f"collective(s) over the {budget} B budget in compiled "
+                    f"{name}: {over[:4]}",
+                    subject=name, over=over, budget=budget))
+        return out
+
+
+class NoHostTransfer(Rule):
+    id = "HLO-HT1"
+    severity = Severity.ERROR
+    invariant = ("the compiled step loop contains no host transfer "
+                 "(infeed/outfeed/send/recv/host custom-call) — one per "
+                 "step serializes decode on PCIe latency")
+    origin = "PR 8"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        hlo = ctx.get("hlo")
+        if not hlo:
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            hits = H.host_transfer_instructions(text)
+            if hits:
+                out.append(self.finding(
+                    f"host transfer in compiled {name}: {hits[:4]}",
+                    subject=name, transfers=hits))
+        return out
+
+
+class DtypeDiscipline(Rule):
+    id = "HLO-DT1"
+    severity = Severity.ERROR
+    invariant = ("int8 resident pages never silently upcast: no s8->f32 "
+                 "convert wider than one layer's gathered pool slice "
+                 "(dequant happens at the gathered view, never on the "
+                 "whole pool)")
+    origin = "PRs 5/7"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        limit = ctx.get("pool_slice_elems")
+        hlo = ctx.get("hlo")
+        if not hlo or limit is None:
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            wide = [(src, dst, n) for src, dst, n
+                    in H.convert_instructions(text)
+                    if src in ("s8", "u8") and dst in ("f32", "f64")
+                    and n > limit]
+            if wide:
+                out.append(self.finding(
+                    f"pool-sized s8->f32 upcast in compiled {name}: "
+                    f"{wide[:4]} (limit {limit} elems — one layer's "
+                    f"gathered slice)",
+                    subject=name, converts=wide, limit_elems=limit))
+        return out
+
+
+class GatherParity(Rule):
+    id = "HLO-GA1"
+    severity = Severity.ERROR
+    invariant = ("kernel-mode decode over CLAQ plans adds at most one "
+                 "tile-sized in-kernel take per permuted plan group over "
+                 "the dense baseline — and ZERO gathers when every group "
+                 "is x-aligned (integer-bit plans)")
+    origin = "PR 5"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        hlo = ctx.get("hlo")
+        base = ctx.get("dense_hlo")
+        plan = ctx.get("plan")
+        if not hlo or not base or not plan or not plan.get("has_plans"):
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            if name not in base:
+                continue
+            quant = sorted(b for op, b in H.gather_instructions(text)
+                           if op == "gather")
+            dense = sorted(b for op, b in H.gather_instructions(base[name])
+                           if op == "gather")
+            added = list(quant)
+            for b in dense:
+                if b in added:
+                    added.remove(b)
+            n_perm = plan["n_permuted_groups"]
+            if n_perm == 0:
+                if len(quant) != len(dense):
+                    out.append(self.finding(
+                        f"x-aligned plans must add ZERO gathers over dense "
+                        f"in compiled {name}: dense has {len(dense)}, "
+                        f"quantized has {len(quant)}",
+                        subject=name, dense=dense, quant=quant))
+                continue
+            # permuted (mixed-precision) plans: each added gather must be
+            # a VMEM-tile-sized in-kernel take, and there is at most one
+            # per permuted group per matmul callsite (XLA may dedupe but
+            # never multiply them)
+            cap = plan["bm"] * plan["max_bk"] * plan["itemsize"]
+            big = [b for b in added if b > cap]
+            if big:
+                out.append(self.finding(
+                    f"activation-sized gather on the kernel decode path of "
+                    f"{name}: {big} B (tile cap {cap} B)",
+                    subject=name, over=big, tile_cap=cap))
+            if len(added) > n_perm:
+                out.append(self.finding(
+                    f"{len(added)} gathers added over dense in {name} but "
+                    f"only {n_perm} permuted plan groups exist",
+                    subject=name, added=added, n_permuted_groups=n_perm))
+        return out
+
+
+class WholeCacheCopy(Rule):
+    id = "HLO-CP1"
+    severity = Severity.WARNING
+    invariant = ("the compiled step loop contains no cache-sized copy — "
+                 "the slot cache updates in place; the one known whole-"
+                 "cache copy lives in eager admission, outside the jits")
+    origin = "PR 7"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        limit = ctx.get("cache_leaf_bytes")
+        hlo = ctx.get("hlo")
+        if not hlo or limit is None:
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            big = [b for op, b in H.copy_instructions(text) if b >= limit]
+            if big:
+                out.append(self.finding(
+                    f"cache-sized copy in compiled {name}: "
+                    f"{sorted(big, reverse=True)[:4]} B (largest cache "
+                    f"leaf {limit} B)",
+                    subject=name, bytes=sorted(big, reverse=True),
+                    threshold=limit))
+        return out
+
+
+class CacheDonation(Rule):
+    id = "HLO-DN1"
+    severity = Severity.WARNING
+    invariant = ("where the platform supports buffer donation, the step "
+                 "jits donate their cache operands (input_output_alias "
+                 "present) so decode never holds two live caches")
+    origin = "PR 8"
+
+    def check(self, ctx: Dict[str, Any]) -> Optional[List[Finding]]:
+        hlo = ctx.get("hlo")
+        if not hlo or not ctx.get("donation_expected"):
+            return None
+        out: List[Finding] = []
+        for name, text in hlo.items():
+            if not H.donation_aliases(text):
+                out.append(self.finding(
+                    f"no input/output alias in compiled {name}: cache "
+                    f"buffers are not donated, every step allocates a "
+                    f"second cache",
+                    subject=name))
+        return out
+
+
+NO_WEIGHT_ALLGATHER = register(NoWeightAllGather())
+COLLECTIVE_BUDGET = register(CollectiveBudget())
+NO_HOST_TRANSFER = register(NoHostTransfer())
+DTYPE_DISCIPLINE = register(DtypeDiscipline())
+GATHER_PARITY = register(GatherParity())
+WHOLE_CACHE_COPY = register(WholeCacheCopy())
+CACHE_DONATION = register(CacheDonation())
+
+HLO_RULES = [NO_WEIGHT_ALLGATHER, COLLECTIVE_BUDGET, NO_HOST_TRANSFER,
+             DTYPE_DISCIPLINE, GATHER_PARITY, WHOLE_CACHE_COPY,
+             CACHE_DONATION]

@@ -68,8 +68,9 @@ for _op in ("exponential", "exponential-minus-one", "log", "log-plus-one",
 
 _COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
-_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
-_OP_RE = re.compile(r"^(?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)"
+# dims may be dynamic ("<=8"): the bound is the right byte proxy
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,<=]*)\]")
+_OP_RE = re.compile(r"^(?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,<=]*\](?:\{[^}]*\})?)"
                     r"\s+([a-z][a-z0-9\-]*)")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
 _CALLEE_RE = re.compile(
@@ -90,8 +91,21 @@ class _Instr:
 
 
 def _shape_elems(dims: str) -> int:
+    """Element count of one bracketed dim list.  Dynamic dims print as
+    `<=N` — the bound is the right proxy for byte accounting.  Malformed
+    fragments count as 0 elements rather than raising mid-scan."""
     n = 1
     for d in dims.split(","):
+        d = d.strip()
+        if not d:
+            continue
+        if d.startswith("<="):
+            d = d[2:]
+        if not d.isdigit():
+            return 0
+    # second pass so a malformed dim voids the whole product
+    for d in dims.split(","):
+        d = d.strip().lstrip("<=")
         if d:
             n *= int(d)
     return n
@@ -106,12 +120,28 @@ def _result_elems(line: str) -> int:
     return _shape_elems(m.group(2))
 
 
+def _tuple_region(rhs: str) -> str:
+    """The balanced leading tuple-type region of an instruction rhs —
+    nested tuples `((f32[2], s32[]), f32[4])` keep every element (the old
+    split-at-first-')' dropped everything after the inner close)."""
+    depth = 0
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[:i + 1]
+    return rhs
+
+
 def _result_bytes(line: str) -> int:
     """Bytes of the result type (first type token after '='); a tuple type
-    sums its parts."""
+    sums its parts (nested tuples included).  `token[]` / `opaque[]` /
+    unknown dtypes contribute 0 — bookkeeping types, not HBM traffic."""
     rhs = line.split("=", 1)[1].lstrip() if "=" in line else line
     if rhs.startswith("("):
-        region = rhs.split(")", 1)[0]     # leading tuple type
+        region = _tuple_region(rhs)
     else:
         region = rhs
     total = 0
@@ -276,6 +306,106 @@ def gather_instructions(text: str):
         for ins in instrs:
             if ins.op in ("gather", "dynamic-slice"):
                 out.append((ins.op, _result_bytes(ins.line)))
+    return out
+
+
+def copy_instructions(text: str):
+    """Every `copy` / `copy-start` instruction in the module (all
+    computations, each listed ONCE) as ``[(op, result_bytes), ...]`` —
+    the contract checker's raw material for the whole-cache-copy audit
+    (HLO-CP1): a copy whose result is cache-sized inside the decode step
+    means the cache round-trips HBM instead of being updated in place."""
+    out = []
+    for comp, instrs in _parse_computations(text).items():
+        if comp == "__entry__":
+            continue
+        for ins in instrs:
+            if ins.op in ("copy", "copy-start"):
+                out.append((ins.op, _result_bytes(ins.line)))
+    return out
+
+
+_CONVERT_OPERAND_RE = re.compile(r"convert\(\s*([a-z][a-z0-9]*)\[([0-9,<=]*)\]")
+
+
+def convert_instructions(text: str):
+    """Every `convert` instruction as ``[(src_dtype, dst_dtype, elems),
+    ...]`` (each listed once, fusion bodies included) — dtype-discipline
+    rules key off widening converts (s8 -> f32 of a pool-sized array means
+    an int8 page path silently upcasted, HLO-DT1)."""
+    out = []
+    for comp, instrs in _parse_computations(text).items():
+        if comp == "__entry__":
+            continue
+        for ins in instrs:
+            if ins.op != "convert":
+                continue
+            rhs = ins.line.split("=", 1)[1].lstrip()
+            mdst = _SHAPE_RE.search(rhs)
+            msrc = _CONVERT_OPERAND_RE.search(rhs)
+            if not mdst or not msrc:
+                continue
+            out.append((msrc.group(1), mdst.group(1),
+                        _shape_elems(mdst.group(2))))
+    return out
+
+
+_HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "send-done", "recv",
+                      "recv-done")
+_HOST_CUSTOM_CALL_RE = re.compile(
+    r'custom_call_target="[^"]*(?:Host|host_compute|PinToHost|Callback'
+    r'|callback)[^"]*"')
+
+
+def host_transfer_instructions(text: str):
+    """Every instruction that moves data between device and host inside
+    the module — infeed/outfeed/send/recv plus host custom-calls — as
+    ``[(op, result_bytes), ...]``.  The compiled decode/verify step loop
+    must contain NONE (HLO-HT1): a host transfer per step serializes the
+    loop on PCIe latency."""
+    out = []
+    for comp, instrs in _parse_computations(text).items():
+        if comp == "__entry__":
+            continue
+        for ins in instrs:
+            if ins.op in _HOST_TRANSFER_OPS:
+                out.append((ins.op, _result_bytes(ins.line)))
+            elif (ins.op == "custom-call"
+                  and _HOST_CUSTOM_CALL_RE.search(ins.line)):
+                out.append(("custom-call", _result_bytes(ins.line)))
+    return out
+
+
+_ALIAS_PAIR_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\(\s*(\d+)\s*,\s*\{([0-9,\s]*)\}")
+
+
+def donation_aliases(text: str):
+    """Input/output aliases from the module header's `input_output_alias`
+    attribute as ``[(param_index, output_index_tuple), ...]`` — empty when
+    nothing is donated.  The attribute's value nests braces
+    (``{ {0}: (1, {}, must-alias) }``), so the region is taken by balanced
+    scan, not regex.  The donation audit (HLO-DN1) checks that cache
+    buffers are donated into the step jits where the platform supports
+    buffer donation (otherwise every step allocates a second cache)."""
+    head = text.split("\n\n", 1)[0]
+    start = head.find("input_output_alias=")
+    if start < 0:
+        return []
+    region = head[head.index("{", start):]
+    depth = 0
+    for i, ch in enumerate(region):
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                region = region[:i + 1]
+                break
+    out = []
+    for mo in _ALIAS_PAIR_RE.finditer(region):
+        out_idx = tuple(int(v) for v in mo.group(1).split(",") if v.strip())
+        out.append((int(mo.group(2)), out_idx))
     return out
 
 

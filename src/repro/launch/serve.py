@@ -139,6 +139,10 @@ def main():
                          "a virtual clock so outcomes replay exactly")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed of the injected fault plan")
+    ap.add_argument("--verify-contracts", action="store_true",
+                    help="run the repro.analysis contract rules over the "
+                         "engine's compiled artifacts at init and refuse "
+                         "to serve on any ERROR finding (DESIGN.md §12)")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP device mesh, e.g. 2x4 (data x model)")
     ap.add_argument("--dp", type=int, default=0,
@@ -219,7 +223,13 @@ def main():
                                   if args.kv_layout == "paged" else None),
                         kv_dtype=(args.kv_dtype
                                   if args.kv_layout == "paged"
-                                  and args.kv_dtype != "f32" else None))
+                                  and args.kv_dtype != "f32" else None),
+                        verify_contracts=args.verify_contracts)
+    if args.verify_contracts:
+        rep = eng.contract_report
+        print(f"[serve] contracts: {len(rep.rules_run)} rules clean "
+              f"({len(rep.findings)} warning(s)) over the compiled "
+              f"decode artifacts")
     if args.kv_layout == "paged":
         print(f"[serve] paged KV cache: page_size={eng.page_size}, "
               f"pool={eng.n_pages} pages, resident dtype "

@@ -151,6 +151,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.trace_rules import TraceSentinel
 from repro.dist import context as dctx
 from repro.dist import sharding as shd
 from repro.kernels import ops as kops
@@ -312,7 +313,8 @@ class ServingEngine:
                  page_size: Optional[int] = None,
                  kv_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 share_prefixes: bool = True):
+                 share_prefixes: bool = True,
+                 verify_contracts: bool = False):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
@@ -478,6 +480,11 @@ class ServingEngine:
         self.draft_prefill_traces = 0
         self.draft_decode_traces = 0
         self.verify_traces = 0
+        # Retrace sentinel: records the abstract signature of every jit
+        # call so the trace rules (repro.analysis) can cross-check the
+        # counters above against distinct-signature counts and the
+        # bucketing compile budget.
+        self.sentinel = TraceSentinel()
 
         # Emission counters (all modes): tokens actually appended to
         # requests, and the engine steps that produced them (decode steps
@@ -595,6 +602,15 @@ class ServingEngine:
             self._draft_prefill = jax.jit(_draft_prefill_fn)
             self._verify = jax.jit(_verify_fn)
 
+        # Opt-in contract gate: lower+compile the decode path NOW and run
+        # the compiled-artifact rules against it (plus a dense dequantized
+        # twin as the gather baseline), raising ContractViolation before
+        # the engine serves a single token from a non-conforming artifact.
+        self.contract_report = None
+        if verify_contracts:
+            from repro.analysis.artifacts import verify_engine
+            self.contract_report = verify_engine(self)
+
     @contextlib.contextmanager
     def _mesh_scope(self):
         """Activate the engine's mesh around jit calls so the layer-level
@@ -679,6 +695,7 @@ class ServingEngine:
         (decode stays weight-resident per shard).  Note: lowering traces,
         so it bumps `decode_traces`."""
         self._sync_tables()
+        self.sentinel.observe_lowering("decode")
         toks = jnp.asarray(self.last_token, jnp.int32)
         with self._mesh_scope():
             return self._decode.lower(self.params, toks, self.cache, None)
@@ -941,6 +958,7 @@ class ServingEngine:
             self.bucketing.record(Bb, bucket)
             cache_b = api.make_cache(self.cfg, Bb, self.max_len,
                                      dtype=self._cache_dtype)
+            self.sentinel.observe("prefill", (Bb, bucket))
             with self._mesh_scope():
                 logits, cache_b, nf = self._prefill(
                     self.params, jnp.asarray(toks), cache_b,
@@ -951,6 +969,7 @@ class ServingEngine:
                     # first token); the draft prefill's logits are unused
                     dcache_b = api.make_cache(self.cfg, Bb, self.max_len,
                                               dtype=self._cache_dtype)
+                    self.sentinel.observe("draft_prefill", (Bb, bucket))
                     dcache_b = self._draft_prefill(
                         self.draft_params, jnp.asarray(toks), dcache_b)
             firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -1028,6 +1047,7 @@ class ServingEngine:
         cache_b = api.make_cache(self.cfg, 1, self.max_len,
                                  dtype=self._cache_dtype)
         dcache_b = None
+        self.sentinel.observe("prefill", (1, bucket))
         with self._mesh_scope():
             _, cache_b, _ = self._prefill(self.params, jnp.asarray(ta),
                                           cache_b, n_j)
@@ -1038,14 +1058,17 @@ class ServingEngine:
             if self.spec is not None:
                 dcache_b = api.make_cache(self.cfg, 1, self.max_len,
                                           dtype=self._cache_dtype)
+                self.sentinel.observe("draft_prefill", (1, bucket))
                 dcache_b = self._draft_prefill(self.draft_params,
                                                jnp.asarray(ta), dcache_b)
                 if bucket != n:
                     dcache_b = self._rollback(dcache_b, n_j)
             for t in toks[:-1]:
                 tok = jnp.asarray([t], jnp.int32)
+                self.sentinel.observe("decode", (1, riv is not None))
                 _, cache_b, _ = self._decode(self.params, tok, cache_b, riv)
                 if self.spec is not None:
+                    self.sentinel.observe("draft_decode", (1,))
                     _, dcache_b = self._draft_decode(self.draft_params, tok,
                                                      dcache_b)
         slot = self.free.pop(0)
@@ -1394,6 +1417,7 @@ class ServingEngine:
             return self._spec_step()
         toks = jnp.asarray(self.last_token, jnp.int32)
         iv = self._inject_vec()
+        self.sentinel.observe("decode", (self.n_slots, iv is not None))
         with self._mesh_scope():
             logits, self.cache, nf = self._decode(self.params, toks,
                                                   self.cache, iv)
@@ -1436,6 +1460,7 @@ class ServingEngine:
         iv = self._inject_vec()
         with self._mesh_scope():
             for j in range(gamma):
+                self.sentinel.observe("draft_decode", (self.n_slots,))
                 dlogits, self.draft_cache = self._draft_decode(
                     self.draft_params, cur, self.draft_cache)
                 cur = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
@@ -1444,12 +1469,15 @@ class ServingEngine:
             # the whole window is accepted (logits discarded).  The whole
             # propose chain stays on device — no host sync until the
             # verify logits are read below.
+            self.sentinel.observe("draft_decode", (self.n_slots,))
             _, self.draft_cache = self._draft_decode(
                 self.draft_params, cur, self.draft_cache)
             drafts_j = jnp.stack(d_cols, axis=1)        # (n_slots, γ)
             span = jnp.concatenate(
                 [jnp.asarray(self.last_token, jnp.int32)[:, None],
                  drafts_j], axis=1)                     # (n_slots, γ+1)
+            self.sentinel.observe(
+                "verify", (self.n_slots, gamma + 1, iv is not None))
             vlogits, self.cache, nf = self._verify(self.params, span,
                                                    self.cache, iv)
         drafts = np.asarray(drafts_j)

@@ -4,8 +4,8 @@ bound against the f32 path across bit-widths and gather modes, engine
 wiring of ``act_dtype``, and the HLO-level claim the tentpole is about —
 a kernel-mode decode step over integer-bit CLAQ plans compiles to the
 SAME number of gather instructions as the dense model's decode step (the
-quantized matmul path contributes zero; `hlo_analysis.gather_
-instructions`)."""
+quantized matmul path contributes zero; shared rule `HLO-GA1` from
+`repro.analysis`)."""
 import dataclasses
 
 import jax
@@ -16,7 +16,6 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import CLAQConfig
 from repro.data import calibration_set
-from repro.dist.hlo_analysis import gather_instructions
 from repro.kernels import ops, ref as ref_lib
 from repro.kernels.plan import prepare_for_inference
 from repro.launch.quantize import claq_quantize
@@ -151,20 +150,29 @@ def test_kernel_decode_step_adds_zero_gathers(int_bit_quantized):
     compiles to exactly as many gather instructions as the DENSE model's
     decode step — the quantized matmul path contributes none (it used to
     contribute one XLA activation gather per matmul).  Holds for f32 and
-    int8 activations (quantization is elementwise)."""
+    int8 activations (quantization is elementwise).  Enforced through the
+    shared HLO-GA1 rule (repro.analysis), the same check
+    ``verify_contracts=True`` runs at engine init."""
+    from repro.analysis import REGISTRY, run_rules
+    from repro.analysis.artifacts import lowered_decode_text, plan_stats
+
     cfg, params, qparams = int_bit_quantized
 
-    def decode_gathers(p, act_dtype=None):
+    def decode_hlo(p, act_dtype=None):
         eng = ServingEngine(p, cfg, n_slots=2, max_len=32,
                             act_dtype=act_dtype)
-        with nn.quant_mode("kernel", interpret=True):
-            txt = eng.lower_decode().compile().as_text()
-        return [b for op, b in gather_instructions(txt) if op == "gather"]
+        return eng, lowered_decode_text(eng)
 
-    dense = decode_gathers(params)
-    quant = decode_gathers(qparams)
-    quant_i8 = decode_gathers(qparams, act_dtype="int8")
-    assert len(quant) == len(dense), (
-        f"quantized decode adds {len(quant) - len(dense)} gathers over "
-        f"dense — the fused matmul path must contribute zero")
-    assert len(quant_i8) == len(dense)
+    _, dense_txt = decode_hlo(params)
+    eng_q, quant_txt = decode_hlo(qparams)
+    _, quant_i8_txt = decode_hlo(qparams, act_dtype="int8")
+
+    plan = plan_stats(eng_q.params, n_slots=2)
+    assert plan["has_plans"] and plan["n_permuted_groups"] == 0, \
+        "integer-bit plans must be all-aligned, else the check is vacuous"
+    for txt in (quant_txt, quant_i8_txt):
+        rep = run_rules([REGISTRY["HLO-GA1"]],
+                        {"hlo": {"decode": txt},
+                         "dense_hlo": {"decode": dense_txt}, "plan": plan})
+        assert rep.rules_run == ["HLO-GA1"] and not rep.findings, \
+            rep.render()

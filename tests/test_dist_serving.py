@@ -238,8 +238,9 @@ from repro.data import calibration_set
 from repro.launch.quantize import claq_quantize
 from repro.models import api
 from repro.serve import ServingEngine
-from repro.kernels.plan import PreparedQuantizedTensor
-from repro.dist.hlo_analysis import analyze_hlo, collective_instructions
+from repro.analysis import REGISTRY, run_rules
+from repro.analysis.artifacts import weight_shard_threshold
+from repro.dist.hlo_analysis import analyze_hlo
 
 # --- AP+OR-quantized smoke model (the paper's deployment format) --------
 cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
@@ -278,16 +279,10 @@ assert all(len(t) == 6 for t in t1)
 assert eng2.bucketing.enabled and eng2.prefill_traces >= 1
 
 # --- decode stays weight-resident per shard -----------------------------
-sharded_plane_bytes = []
-def visit(leaf):
-    if isinstance(leaf, PreparedQuantizedTensor) and leaf.shards_whole_tiles(4):
-        for g in leaf.groups:
-            for p in g.planes:
-                sharded_plane_bytes.append(int(np.prod(p.shape)) * 4)
-jax.tree_util.tree_map(
-    visit, eng2.params,
-    is_leaf=lambda l: isinstance(l, PreparedQuantizedTensor))
-assert sharded_plane_bytes, "no quantized unit sharded -> vacuous check"
+# threshold = largest sharded quantized plane; computed by the shared
+# helper the HLO-AG1 contract rule uses (repro.analysis.artifacts)
+threshold = weight_shard_threshold(eng2.params, model_parts=4)
+assert threshold, "no quantized unit sharded -> vacuous check"
 
 # --- preemption on the real 2x4 mesh: the jitted slot clear and the ----
 # --- batch-1 resume replay must preserve bitwise token parity ----------
@@ -311,13 +306,10 @@ print("mesh preemption parity OK: 4 preempted, 4 resumed, bitwise tokens")
 txt = eng2.lower_decode().compile().as_text()
 res = analyze_hlo(txt)
 assert res["flops"] > 0                        # the analyzer parsed the module
-threshold = max(sharded_plane_bytes)
-gathers = [b for kind, b in collective_instructions(txt)
-           if kind == "all-gather"]
-assert all(b < threshold for b in gathers), (
-    f"weight-sized all-gather in decode: {sorted(gathers, reverse=True)[:4]}"
-    f" vs largest sharded plane {threshold}B")
-print("dist serving parity OK:", len(sharded_plane_bytes),
-      "sharded plane leaves, max all-gather",
-      max(gathers) if gathers else 0, "B, threshold", threshold, "B")
+rep = run_rules([REGISTRY["HLO-AG1"], REGISTRY["HLO-CB1"]],
+                {"hlo": {"decode": txt}, "weight_shard_bytes": threshold})
+assert rep.rules_run == ["HLO-AG1", "HLO-CB1"] and not rep.findings, (
+    rep.render())
+print("dist serving parity OK: decode clean under HLO-AG1/HLO-CB1,"
+      " weight-shard threshold", threshold, "B")
 """, devices=8, timeout=900)

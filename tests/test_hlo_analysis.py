@@ -1,0 +1,122 @@
+"""Unit regression pins for dist.hlo_analysis parsing helpers.
+
+The analyzer's shape math used to be exercised only through full engine
+lowerings; these tests pin `_shape_elems` / `_result_bytes` (and the
+contract-checker parsers built on them) on hand-written HLO snippets, so
+a parsing regression shows up as a one-line diff instead of a mysterious
+byte-count drift in a 900-second multi-device test.
+"""
+import pytest
+
+from repro.dist.hlo_analysis import (_result_bytes, _shape_elems,
+                                     _tuple_region, analyze_hlo,
+                                     collective_instructions,
+                                     convert_instructions,
+                                     copy_instructions, donation_aliases,
+                                     gather_instructions,
+                                     host_transfer_instructions)
+
+
+# ---------------------------------------------------------------- _shape_elems
+@pytest.mark.parametrize("dims,expected", [
+    ("8,16", 128),
+    ("", 1),                       # scalar f32[]
+    ("4", 4),
+    ("2,3,5", 30),
+    ("<=8,4", 32),                 # dynamic dim: bound is the proxy
+    ("2,<=16", 32),
+    ("bogus", 0),                  # malformed -> 0, never raises
+    ("4,x", 0),                    # one malformed dim voids the product
+])
+def test_shape_elems(dims, expected):
+    assert _shape_elems(dims) == expected
+
+
+# --------------------------------------------------------------- _result_bytes
+@pytest.mark.parametrize("line,expected", [
+    ("  %r = f32[8,16]{1,0} add(...)", 8 * 16 * 4),
+    ("  %r = s8[32]{0} copy(...)", 32),
+    ("  %r = f32[] constant(0)", 4),
+    # tuple results sum their parts
+    ("  ROOT %t = (f32[8]{0}, s32[4]{0}) tuple(...)", 8 * 4 + 4 * 4),
+    # nested tuples keep EVERY element (the old first-')' split dropped
+    # the trailing f32[4])
+    ("  %t = ((f32[2]{0}, s32[]), f32[4]{0}) tuple(...)",
+     2 * 4 + 4 + 4 * 4),
+    # token / opaque are bookkeeping types, not HBM traffic
+    ("  %t = token[] after-all()", 0),
+    ("  %t = (f32[8]{0}, token[]) tuple(...)", 8 * 4),
+    ("  %t = opaque[] custom-call(...)", 0),
+    # dynamic result dims use the bound
+    ("  %r = f32[<=8,4]{1,0} pad(...)", 8 * 4 * 4),
+])
+def test_result_bytes(line, expected):
+    assert _result_bytes(line) == expected
+
+
+def test_tuple_region_is_balanced():
+    rhs = "((f32[2]{0}, s32[]), f32[4]{0}) tuple(%a, %b)"
+    assert _tuple_region(rhs) == "((f32[2]{0}, s32[]), f32[4]{0})"
+
+
+_MODULE = """\
+HloModule step, input_output_alias={ {0}: (1, {}, must-alias), {2}: (3, {}) }
+
+%body (p: (f32[8,16], s32[])) -> (f32[8,16], s32[]) {
+  %p = (f32[8,16]{1,0}, s32[]) parameter(0)
+  %w = f32[8,16]{1,0} get-tuple-element(%p), index=0
+  %cp = f32[8,16]{1,0} copy(%w)
+  %q = s8[8,16]{1,0} convert(f32[8,16]{1,0} %cp)
+  %deq = f32[8,16]{1,0} convert(s8[8,16]{1,0} %q)
+  %ag = f32[64,16]{1,0} all-gather(%w), replica_groups={}
+  %g = f32[2,16]{1,0} gather(%w, s32[2]{0} %idx), offset_dims={1}
+  %out = token[] outfeed(%w, token[] %tok)
+  ROOT %t = (f32[8,16]{1,0}, s32[]) tuple(%cp, %i)
+}
+
+ENTRY %step (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  ROOT %r = f32[8,16]{1,0} copy(%a)
+}
+"""
+
+
+def test_copy_instructions():
+    copies = copy_instructions(_MODULE)
+    assert ("copy", 8 * 16 * 4) in copies
+    assert len(copies) == 2        # body copy + entry copy, each once
+
+
+def test_convert_instructions():
+    convs = convert_instructions(_MODULE)
+    assert ("f32", "s8", 128) in convs     # quantize direction
+    assert ("s8", "f32", 128) in convs     # dequantize direction
+
+
+def test_collective_and_gather_instructions():
+    assert ("all-gather", 64 * 16 * 4) in collective_instructions(_MODULE)
+    assert ("gather", 2 * 16 * 4) in gather_instructions(_MODULE)
+
+
+def test_host_transfer_instructions():
+    hits = host_transfer_instructions(_MODULE)
+    assert [op for op, _ in hits] == ["outfeed"]
+    host_cc = ('ENTRY %e (a: f32[4]) -> f32[4] {\n'
+               '  ROOT %c = f32[4]{0} custom-call(%a), '
+               'custom_call_target="xla_ffi_python_cpu_callback"\n}\n')
+    assert [op for op, _ in host_transfer_instructions(host_cc)] == [
+        "custom-call"]
+    clean = ('ENTRY %e (a: f32[4]) -> f32[4] {\n'
+             '  ROOT %c = f32[4]{0} add(%a, %a)\n}\n')
+    assert host_transfer_instructions(clean) == []
+
+
+def test_donation_aliases():
+    assert donation_aliases(_MODULE) == [(1, (0,)), (3, (2,))]
+    assert donation_aliases("HloModule step\n\nENTRY %e () -> f32[] {\n"
+                            "}") == []
+
+
+def test_analyze_hlo_survives_tuple_and_token_types():
+    res = analyze_hlo(_MODULE)
+    assert res["hbm_bytes"] > 0    # parsed through tuples/tokens, no raise

@@ -96,7 +96,12 @@ def _serve(eng, prompts, max_new, eos_id=None):
 
 def test_trace_count_bounded_by_buckets(fp_model):
     """≥6 distinct prompt lengths in [1, max_len) cost at most
-    ceil(log2(max_len / min_bucket)) + 1 prefill traces."""
+    ceil(log2(max_len / min_bucket)) + 1 prefill traces.  The bound is
+    also enforced by the shared TRC-CC1/TRC-SG1 rules over the engine's
+    TraceSentinel — the same check ``verify_contracts=True`` runs."""
+    from repro.analysis import REGISTRY, run_rules
+    from repro.analysis.artifacts import compile_budgets, trace_counts
+
     cfg, params = fp_model
     lengths = [1, 3, 7, 9, 20, 40, 63]
     prompts = [list(range(1, n + 1)) for n in lengths]
@@ -110,6 +115,14 @@ def test_trace_count_bounded_by_buckets(fp_model):
     assert eng.bucketing.max_traces() == bound
     assert eng.prefill_traces <= bound, eng.stats()
     assert eng.stats()["bucket_misses"] == eng.prefill_traces
+
+    rep = run_rules([REGISTRY["TRC-CC1"], REGISTRY["TRC-SG1"]],
+                    {"sentinel": eng.sentinel,
+                     "compile_budget": compile_budgets(eng),
+                     "trace_counts": trace_counts(eng)})
+    assert rep.rules_run == ["TRC-CC1", "TRC-SG1"] and not rep.findings, \
+        rep.render()
+    assert eng.sentinel.distinct("prefill") == eng.prefill_traces
 
     # without bucketing every distinct length is its own compile
     eng2 = ServingEngine(params, cfg, n_slots=2, max_len=64,
@@ -165,53 +178,29 @@ def test_ap_kernel_decode_gathers_are_tile_sized(quantized_model, fp_model):
     compiled kernel-mode decode step may therefore add gathers over the
     dense baseline, but every one of them must be a TILE-sized in-kernel
     take, never the old activation-sized XLA gather (whose result spans
-    the whole fused K axis of a matmul)."""
-    from repro.dist.hlo_analysis import gather_instructions
-    from repro.kernels.plan import PreparedQuantizedTensor
-    from repro.models import modules as nn
+    the whole fused K axis of a matmul).  The byte cap, the
+    count-per-permuted-group cap, and the multiset diff against the dense
+    baseline all live in the shared HLO-GA1 rule (repro.analysis)."""
+    from repro.analysis import REGISTRY, run_rules
+    from repro.analysis.artifacts import lowered_decode_text, plan_stats
 
     cfg, qparams = quantized_model
     _, params = fp_model
 
-    def decode_gathers(p):
+    def decode_hlo(p):
         eng = ServingEngine(p, cfg, n_slots=2, max_len=32)
-        with nn.quant_mode("kernel", interpret=True):
-            txt = eng.lower_decode().compile().as_text()
-        return sorted(b for op, b in gather_instructions(txt)
-                      if op == "gather")
+        return eng, lowered_decode_text(eng)
 
-    g_dense = decode_gathers(params)
-    g_quant = decode_gathers(qparams)
+    _, dense_txt = decode_hlo(params)
+    eng_q, quant_txt = decode_hlo(qparams)
 
-    # worst-case in-kernel take result: (bm, bk) f32 with bm=8 decode rows
-    eng = ServingEngine(qparams, cfg, n_slots=2, max_len=32)
-    max_bk = 0
-    n_permuted_groups = 0
-
-    def visit(leaf):
-        nonlocal max_bk, n_permuted_groups
-        if isinstance(leaf, PreparedQuantizedTensor):
-            permuted = [g for g in leaf.groups if g.x_start is None]
-            n_permuted_groups += len(permuted)
-            if permuted:
-                max_bk = max(max_bk, max(g.bk for g in permuted))
-    jax.tree_util.tree_map(
-        visit, eng.params,
-        is_leaf=lambda l: isinstance(l, PreparedQuantizedTensor))
-    assert max_bk > 0, "AP model produced no permuted plan -> vacuous"
-
-    added = list(g_quant)
-    for b in g_dense:
-        if b in added:
-            added.remove(b)
-    tile_cap = 8 * max_bk * 4
-    assert all(b <= tile_cap for b in added), (
-        f"activation-sized gather on the kernel decode path: "
-        f"{[b for b in added if b > tile_cap]} (cap {tile_cap}B)")
-    # one take per permuted group per matmul CALLSITE (stacked layers scan
-    # over one traced body, so the stack multiplies nothing); XLA may
-    # dedupe but never multiply them
-    assert len(added) <= n_permuted_groups, (len(added), n_permuted_groups)
+    plan = plan_stats(eng_q.params, n_slots=2)
+    assert plan["n_permuted_groups"] > 0, \
+        "AP model produced no permuted plan -> vacuous"
+    rep = run_rules([REGISTRY["HLO-GA1"]],
+                    {"hlo": {"decode": quant_txt},
+                     "dense_hlo": {"decode": dense_txt}, "plan": plan})
+    assert rep.rules_run == ["HLO-GA1"] and not rep.findings, rep.render()
 
 
 def test_batched_admission_shares_one_prefill(fp_model):
