@@ -36,6 +36,15 @@ pool of the same byte size (DESIGN.md §11), fp and int8 resident pages.
 It ASSERTS paged >= 2x contiguous and int8 >= paged fp, and the counts
 land in BENCH_serve.json under ``paged_capacity``.
 
+The REPLAY scenario (serve/replay.py, DESIGN.md §13) drives a seeded
+synthesized arrival trace through a telemetry-instrumented engine under
+a pressure-window fault plan and records the scheduling report —
+TTFT/TPOT p50/p90/p99, tokens/s/slot, queue-depth and page-occupancy
+timelines — under ``results["replay"]``.  It ASSERTS that the telemetry
+hooks are observation-only: the telemetry-on and telemetry-off token
+streams must be bit-identical, and the preempt/resume path must have
+actually fired (a latency report over an idle engine proves nothing).
+
 `serve_bench()` writes BENCH_serve.json at the repo root (the serving
 trajectory's counterpart to BENCH_kernel.json); CI runs `--smoke` and
 the fault-injection smoke `--smoke --inject-faults`.
@@ -54,8 +63,9 @@ import numpy as np
 
 from repro.core import APConfig, CLAQConfig, ORConfig, draft_config
 from repro.launch.quantize import quantize_model_params
-from repro.serve import (AdmissionRejected, FaultInjector, RetryPolicy,
-                         ServingEngine, SpecConfig, StepClock)
+from repro.serve import (AdmissionRejected, FaultInjector, Replayer,
+                         RetryPolicy, ServingEngine, SpecConfig, StepClock,
+                         Telemetry, synthesize_trace, validate_report)
 
 _BENCH_JSON = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -210,6 +220,64 @@ def robustness_scenario(smoke: bool = False, seed: int = 0) -> dict:
         "finished_parity": True,
         "deterministic_replay": True,
         "all_terminal": True,
+    }
+
+
+def replay_scenario(smoke: bool = False, seed: int = 0) -> dict:
+    """Trace-driven replay under a preempt/resume storm (see module
+    docstring).  Returns the scheduling-report subset recorded under
+    ``results["replay"]``; raises if telemetry perturbs the token stream
+    or the pressure plan never preempted."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api
+
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    steps = 16 if smoke else 32
+    trace = synthesize_trace(seed=seed, steps=steps, vocab=cfg.vocab,
+                             max_new=(4, 9))
+
+    def run(telemetry):
+        # pressure-only fault plan: deterministic preempt/resume churn,
+        # no numeric faults (latency accounting, not quarantine, is under
+        # test here)
+        injector = FaultInjector(seed=seed + 7, horizon=max(16, steps),
+                                 nan_faults=0, inf_faults=0,
+                                 transient_failures=0, pressure_windows=2,
+                                 pressure_frac=(0.15, 0.25))
+        eng = ServingEngine(params, cfg, n_slots=3, max_len=48,
+                            min_bucket=8, clock=StepClock(step_ms=10.0),
+                            faults=injector, on_pressure="preempt",
+                            telemetry=telemetry)
+        rep = Replayer(eng, trace).run()
+        fin = eng.take_finished()
+        return rep, {u: list(r.tokens) for u, r in fin.items()}
+
+    rep_off, toks_off = run(None)
+    assert rep_off is None       # no telemetry -> no report, by contract
+    report, toks_on = run(Telemetry())
+    validate_report(report)
+    # the hooks must be observation-only: bit-identical token streams
+    assert toks_on == toks_off, (
+        "telemetry-on token stream diverged from telemetry-off")
+    sched = report["scheduling"]
+    assert sched["preemptions"] >= 1 and sched["resumes"] >= 1, (
+        f"pressure plan never preempted (preemptions="
+        f"{sched['preemptions']}, resumes={sched['resumes']}): replay "
+        f"scenario is vacuous, retune pressure_frac")
+    assert report["ttft_ms"]["count"] >= 1, "no request reached a first token"
+    return {
+        "trace": report["trace"],
+        "requests": report["requests"],
+        "ttft_ms": report["ttft_ms"],
+        "tpot_ms": report["tpot_ms"],
+        "queue_wait_ms": report["queue_wait_ms"],
+        "tokens": report["tokens"],
+        "scheduling": sched,
+        "driver_steps": report["driver_steps"],
+        "telemetry_parity": True,
     }
 
 
@@ -417,6 +485,15 @@ def serve_bench(out_json: str = _BENCH_JSON, smoke: bool = False,
                  f"resumes={rob['resumes']};"
                  f"abandoned={rob['lifecycle']['abandoned']};"
                  f"failed={rob['lifecycle']['failed']}"))
+
+    rp = replay_scenario(smoke=smoke)
+    results["replay"] = rp
+    rows.append(("serve/replay", rp["ttft_ms"]["p50"],
+                 f"ttft_p50={rp['ttft_ms']['p50']:.2f};"
+                 f"ttft_p99={rp['ttft_ms']['p99']:.2f};"
+                 f"tpot_p50={rp['tpot_ms']['p50']:.2f};"
+                 f"tok_s_slot={rp['tokens']['per_s_per_slot']:.2f};"
+                 f"preemptions={rp['scheduling']['preemptions']}"))
 
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -18,6 +18,17 @@ only their own request), and ``--inject-faults`` drives the whole thing
 with a seeded deterministic fault plan (NaN/Inf logits, cache-pressure
 windows forcing preemption+resume, transient step failures absorbed by
 bounded retry) — the demo must end with every request terminal.
+
+Telemetry / replay (DESIGN.md §13): ``--telemetry`` attaches the
+per-request span recorder (zero overhead when off), ``--replay-trace
+trace.jsonl`` drives submissions from a JSONL arrival trace instead of
+``--requests`` (synthesize one with ``python -m repro.serve.replay``),
+``--report-json out.json`` writes the end-of-run scheduling report
+(TTFT/TPOT p50/p90/p99, tokens/s/slot, queue/occupancy timelines,
+preemption accounting), ``--telemetry-trace out.json`` writes a
+Chrome/Perfetto ``trace_event`` file (one track per slot — open it at
+ui.perfetto.dev), and ``--stats`` prints every engine counter through
+the ONE uniform metrics registry instead of ad-hoc dicts.
 """
 from __future__ import annotations
 
@@ -34,8 +45,10 @@ from repro.core import APConfig, CLAQConfig, ORConfig
 from repro.data import calibration_set
 from repro.launch.quantize import claq_quantize, claq_quantize_with_draft
 from repro.models import api
-from repro.serve import (AdmissionRejected, FaultInjector, RetryPolicy,
-                         ServingEngine, SpecConfig, StepClock)
+from repro.serve import (AdmissionRejected, FaultInjector, Replayer,
+                         RetryPolicy, ServingEngine, SpecConfig, StepClock,
+                         Telemetry, build_report, load_trace,
+                         write_perfetto)
 
 
 def _build_mesh(args):
@@ -61,7 +74,7 @@ def _build_mesh(args):
     return jax.make_mesh((dp, tp), ("data", "model"))
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -150,7 +163,29 @@ def main():
                          "--mesh-shape)")
     ap.add_argument("--tp", type=int, default=0,
                     help="tensor(model)-parallel mesh size")
-    args = ap.parse_args()
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach the per-request span recorder "
+                         "(serve/telemetry.py) — structured lifecycle "
+                         "events + TTFT/TPOT histograms, host-side only, "
+                         "zero overhead when off")
+    ap.add_argument("--replay-trace", metavar="PATH",
+                    help="drive submissions from this JSONL arrival trace "
+                         "instead of --requests (implies --telemetry; "
+                         "synthesize a trace with `python -m "
+                         "repro.serve.replay`)")
+    ap.add_argument("--report-json", metavar="PATH",
+                    help="write the end-of-run scheduling report here — "
+                         "TTFT/TPOT p50/p90/p99, tokens/s/slot, timelines, "
+                         "preemption accounting (implies --telemetry)")
+    ap.add_argument("--telemetry-trace", metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON here — "
+                         "one track per slot, spans for prefill/decode/"
+                         "spec/resume; open at ui.perfetto.dev (implies "
+                         "--telemetry)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the uniform metrics report at exit (every "
+                         "stats() counter through the metrics registry)")
+    args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -205,6 +240,11 @@ def main():
         clock = StepClock()
         print(f"[serve] fault plan (seed {args.fault_seed}): "
               f"{json.dumps(injector.describe())}")
+    # any telemetry-consuming flag turns the recorder on; otherwise the
+    # engine hooks stay None and cost nothing on the hot path
+    telemetry = (Telemetry()
+                 if (args.telemetry or args.replay_trace or args.report_json
+                     or args.telemetry_trace) else None)
     eng = ServingEngine(params, cfg, n_slots=args.slots,
                         max_len=args.max_len, min_bucket=args.min_bucket,
                         bucketing=not args.no_bucketing, mesh=mesh,
@@ -224,7 +264,8 @@ def main():
                         kv_dtype=(args.kv_dtype
                                   if args.kv_layout == "paged"
                                   and args.kv_dtype != "f32" else None),
-                        verify_contracts=args.verify_contracts)
+                        verify_contracts=args.verify_contracts,
+                        telemetry=telemetry)
     if args.verify_contracts:
         rep = eng.contract_report
         print(f"[serve] contracts: {len(rep.rules_run)} rules clean "
@@ -250,39 +291,51 @@ def main():
     t_decode = 0.0
     backpressure_waits = 0
     fault_retries = 0
-    while pending or eng.active or len(eng.queue):
-        while pending:
-            try:
-                eng.submit(pending[0], max_new_tokens=args.max_new,
-                           deadline_ms=args.deadline_ms or None)
-                pending.pop(0)
-            except AdmissionRejected:
-                if not eng.active and not len(eng.queue):
-                    raise        # empty engine rejected it: will never fit
-                backpressure_waits += 1   # queue full: drain a step first
-                break
-        ts = time.time()
-        emitted, retries = retry.run(eng.step)
-        fault_retries += retries
-        if clock is not None:
-            clock.advance()
-        if emitted:
-            steps += 1
-            # speculative steps emit LISTS of accepted tokens per request;
-            # only those count toward throughput (rejected drafts are
-            # rolled back, not served)
-            step_tokens += sum(len(v) if isinstance(v, list) else 1
-                               for v in emitted.values())
-            t_decode += time.time() - ts
+    report = None
+    if args.replay_trace:
+        # trace-driven mode: the Replayer owns arrivals, stepping, and the
+        # end-of-run scheduling report; --requests is ignored
+        trace = load_trace(args.replay_trace)
+        print(f"[serve] replaying {len(trace)} arrivals from "
+              f"{args.replay_trace}")
+        report = Replayer(eng, trace, retry=retry).run()
+        steps = report["driver_steps"]
+        backpressure_waits = report["scheduling"]["backpressure_waits"]
+        fault_retries = report["scheduling"]["transient_retries"]
+    else:
+        while pending or eng.active or len(eng.queue):
+            while pending:
+                try:
+                    eng.submit(pending[0], max_new_tokens=args.max_new,
+                               deadline_ms=args.deadline_ms or None)
+                    pending.pop(0)
+                except AdmissionRejected:
+                    if not eng.active and not len(eng.queue):
+                        raise    # empty engine rejected it: will never fit
+                    backpressure_waits += 1  # queue full: drain first
+                    break
+            ts = time.time()
+            emitted, retries = retry.run(eng.step)
+            fault_retries += retries
+            if clock is not None:
+                clock.advance()
+            if emitted:
+                steps += 1
+                # speculative steps emit LISTS of accepted tokens per
+                # request; only those count toward throughput (rejected
+                # drafts are rolled back, not served)
+                step_tokens += sum(len(v) if isinstance(v, list) else 1
+                                   for v in emitted.values())
+                t_decode += time.time() - ts
     finished = eng.take_finished()
     dt = time.time() - t0
     # Throughput counts tokens actually emitted — EOS can retire a request
     # before its max_new_tokens budget, so `done * max_new` overcounts.
-    total_tokens = sum(len(r.tokens) for r in finished.values())
+    total_tokens = sum(r.tokens_out for r in finished.values())
     st = eng.stats()
     print(f"[serve] {len(finished)} requests, {total_tokens} tokens, "
           f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
-    if steps:
+    if steps and t_decode:
         print(f"[serve] {steps} decode steps, "
               f"{step_tokens / steps:.2f} tokens/step, "
               f"{t_decode / steps * 1e3:.1f} ms/step "
@@ -296,24 +349,44 @@ def main():
     print(f"[serve] prefill traces {st['prefill_traces']} "
           f"(buckets {st['buckets']}), compile-cache hit rate "
           f"{st['bucket_hit_rate']:.0%}")
-    if "paged" in st:
-        pg = st["paged"]
-        print(f"[serve] pages: {pg['pages_in_use']}/{pg['n_pages']} in use "
-              f"({pg['pool_utilization']:.0%}), peak {pg['peak_pages_in_use']} "
-              f"pool / {pg['peak_pages_per_request']} per request; "
-              f"resident {pg['bytes_resident'] / 1024:.0f} KiB of "
-              f"{pg['bytes_pool'] / 1024:.0f} KiB pool vs "
-              f"{pg['bytes_contiguous_fp'] / 1024:.0f} KiB contiguous fp; "
-              f"prefix hits {pg['prefix_hits']} "
-              f"({pg['prefix_shared_tokens']} tokens shared), "
-              f"cow copies {pg['cow_copies']}, "
-              f"evictions {pg['page_evictions']}")
+    if "paged" in st and not args.stats:
+        # paged counters now live on the metrics registry (one uniform
+        # naming scheme); --stats prints the full report, this is the
+        # abbreviated default view rendered from the same registry
+        print(eng.metrics().render(prefix="serve.paged",
+                                   title="serve.paged"))
     lc = st["lifecycle"]
     nonterminal = len(eng.active) + st["queued"]
     print(f"[serve] lifecycle: {json.dumps(lc)}, preemptions "
           f"{st['preemptions']}, resumes {st['resumes']}, backpressure "
           f"waits {backpressure_waits}, transient-fault retries "
           f"{fault_retries}")
+    if telemetry is not None and report is None:
+        # non-replay run with telemetry on: build the same scheduling
+        # report the Replayer would have produced
+        report = build_report(
+            eng, elapsed=dt, driver_steps=steps,
+            extra={"backpressure_waits": backpressure_waits,
+                   "transient_retries": fault_retries,
+                   "expired_at_submit": 0,
+                   "rejected_unfittable": 0})
+    if report is not None:
+        tt, tp = report["ttft_ms"], report["tpot_ms"]
+        print(f"[serve] ttft_ms p50/p90/p99 = {tt['p50']:.2f}/"
+              f"{tt['p90']:.2f}/{tt['p99']:.2f}  tpot_ms p50/p90/p99 = "
+              f"{tp['p50']:.2f}/{tp['p90']:.2f}/{tp['p99']:.2f}  "
+              f"tokens/s/slot = "
+              f"{report['tokens']['per_s_per_slot']:.2f}")
+    if args.report_json:
+        with open(args.report_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[serve] scheduling report -> {args.report_json}")
+    if args.telemetry_trace:
+        write_perfetto(args.telemetry_trace, telemetry)
+        print(f"[serve] perfetto trace -> {args.telemetry_trace} "
+              f"(open at ui.perfetto.dev)")
+    if args.stats:
+        print(eng.metrics().render(title="serve metrics"))
     if nonterminal:
         raise SystemExit(
             f"[serve] {nonterminal} requests never reached a terminal "

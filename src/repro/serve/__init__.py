@@ -7,4 +7,10 @@ from .lifecycle import (AdmissionQueue, AdmissionRejected,  # noqa: F401
                         TERMINAL_STATES)
 from .paging import (PageAllocator, PoolExhausted,  # noqa: F401
                      PrefixRegistry)
+from .replay import (Arrival, Replayer, build_report,  # noqa: F401
+                     load_trace, save_trace, synthesize_trace,
+                     validate_report)
 from .speculative import SpecConfig  # noqa: F401
+from .telemetry import (Histogram, MetricsRegistry,  # noqa: F401
+                        Telemetry, perfetto_trace, registry_from_stats,
+                        write_perfetto)

@@ -168,6 +168,7 @@ from .lifecycle import (AdmissionQueue, AdmissionRejected, DeadlineExceeded,
                         TERMINAL_STATES)
 from .paging import PageAllocator, PoolExhausted, PrefixRegistry
 from .speculative import SpecConfig
+from .telemetry import MetricsRegistry, Telemetry, registry_from_stats
 
 Array = jax.Array
 
@@ -213,6 +214,13 @@ class Request:
     submitted_at: float = 0.0
     preemptions: int = 0                # times this request was preempted
     diagnostics: Optional[Dict[str, Any]] = None
+
+    @property
+    def tokens_out(self) -> int:
+        """Tokens actually emitted so far — on a retired request, the
+        post-hoc denominator for TPOT (``(last - first) / (tokens_out -
+        1)``) and the per-request throughput numerator."""
+        return len(self.tokens)
 
     @property
     def done(self) -> bool:
@@ -314,7 +322,8 @@ class ServingEngine:
                  kv_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
                  share_prefixes: bool = True,
-                 verify_contracts: bool = False):
+                 verify_contracts: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
@@ -402,6 +411,16 @@ class ServingEngine:
         self.faults = faults
         self.on_pressure = on_pressure
         self._clock = clock if clock is not None else time.monotonic
+        # Per-request span recorder (serve/telemetry.py): every hook call
+        # below is guarded by `is not None`, so a disabled engine pays one
+        # predicate per lifecycle edge and NOTHING inside the jits —
+        # telemetry is host-side by construction (AST/trace contract
+        # rules stay green with it attached).  The recorder binds THIS
+        # engine's injectable clock, so StepClock runs record
+        # deterministic timestamps.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.attach(n_slots=n_slots, clock=self._clock)
         self._pressure_limit: Optional[int] = None
         # moe decode rows are router-coupled: a batch-1 resume replay is
         # not bitwise the batched decode, so moe cannot preempt and falls
@@ -610,6 +629,13 @@ class ServingEngine:
         if verify_contracts:
             from repro.analysis.artifacts import verify_engine
             self.contract_report = verify_engine(self)
+
+    @property
+    def clock(self):
+        """The engine's injectable monotonic clock (``StepClock`` in
+        deterministic runs) — drivers and the replayer read time through
+        this, never through the wall clock directly (AST-DT1)."""
+        return self._clock
 
     @contextlib.contextmanager
     def _mesh_scope(self):
@@ -888,6 +914,8 @@ class ServingEngine:
         except AdmissionRejected:
             self.admission_rejections += 1
             raise
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req, self.engine_steps)
         return req.uid
 
     def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
@@ -910,6 +938,9 @@ class ServingEngine:
                 f"need {len(prompts)} free slots, have {len(self.free)}")
         reqs = [self._make_request(p, max_new_tokens, eos_id, priority,
                                    deadline_ms) for p in prompts]
+        if self.telemetry is not None:
+            for req in reqs:
+                self.telemetry.on_submit(req, self.engine_steps)
         self._admit(reqs)
         return [r.uid for r in reqs]
 
@@ -943,6 +974,8 @@ class ServingEngine:
 
         for key, idxs in groups.items():
             bucket = key if batch_safe else key[0]
+            tel = self.telemetry
+            t0 = tel.now() if tel is not None else 0.0
             B = len(idxs)
             # The batch size is bucketed too (next power of 2, capped at
             # n_slots): the jit cache is keyed on the (batch, bucket)
@@ -1001,6 +1034,9 @@ class ServingEngine:
                         self.draft_cache, dcache_b, slots, lens[:B].tolist(),
                         self.bucketing.enabled)
             self._repin_cache()
+            if tel is not None:
+                tel.on_admit([reqs[i].uid for i in idxs], slots, bucket,
+                             Bb, tel.now() - t0, self.engine_steps)
             for r, i in enumerate(idxs):
                 req = reqs[i]
                 req.slot = slots[r]
@@ -1028,6 +1064,8 @@ class ServingEngine:
         P, toks = req.prompt, req.tokens
         n = len(P)
         fill = n + len(toks) - 1
+        tel = self.telemetry
+        t0 = tel.now() if tel is not None else 0.0
         # Paged: reserve the resumed fill's pages BEFORE any replay work —
         # PoolExhausted must leave the request untouched (still QUEUED) so
         # _pump_queue can park it at the queue front.  Only whole prefix
@@ -1095,6 +1133,9 @@ class ServingEngine:
         self.active[req.uid] = req
         self.last_token[slot] = toks[-1]
         self.resumes += 1
+        if tel is not None:
+            tel.on_resume(req.uid, slot, max(len(toks) - 1, 0),
+                          tel.now() - t0, self.engine_steps)
 
     # -------------------------------------------------------------- lifecycle
     def _retire(self, req: Request, state: RequestState = RequestState.FINISHED,
@@ -1104,6 +1145,10 @@ class ServingEngine:
         budget/EOS, truncation, abandonment, and quarantine."""
         if diagnostics is not None:
             req.diagnostics = diagnostics
+        if self.telemetry is not None:
+            # before the transition/slot recycle: the event carries the
+            # slot the request retired from (or -1 for queued work)
+            self.telemetry.on_retire(req, state, self.engine_steps)
         req.transition(state)
         self._release_pages(req)
         if req.slot >= 0:
@@ -1126,6 +1171,8 @@ class ServingEngine:
         token is held to the same budget as decode-step tokens."""
         req.tokens.append(t)
         self.last_token[req.slot] = t
+        if self.telemetry is not None:
+            self.telemetry.on_token(req, self.engine_steps)
         if (len(req.tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and t == req.eos_id)):
             self._retire(req, RequestState.FINISHED)
@@ -1164,6 +1211,9 @@ class ServingEngine:
         fill (a no-op for them) — reusing `_rollback_tail`'s leaf
         classification, so a recycled slot is indistinguishable from a
         never-used one."""
+        if self.telemetry is not None:
+            self.telemetry.on_preempt([(r.uid, r.slot) for r in victims],
+                                      reason, self.engine_steps)
         for req in victims:
             req.transition(RequestState.PREEMPTED)
             req.preemptions += 1
@@ -1395,6 +1445,15 @@ class ServingEngine:
         are absent from the returned dict — drain them via
         ``take_finished()``."""
         self._tick()
+        tel = self.telemetry
+        if tel is not None:
+            # per-step occupancy gauges (same-step samples overwrite, so
+            # an idle driver loop cannot grow the series)
+            tel.sample("queue_depth", self.engine_steps, len(self.queue))
+            tel.sample("active_slots", self.engine_steps, len(self.active))
+            if self._paged:
+                tel.sample("pages_in_use", self.engine_steps,
+                           self.allocator.pages_in_use)
         if not self.active:
             if len(self.queue):
                 # idle step with pending work: step-indexed fault plans
@@ -1415,6 +1474,9 @@ class ServingEngine:
             self._sync_tables()
         if self.spec is not None:
             return self._spec_step()
+        step_idx = self.engine_steps
+        slot_of = {uid: r.slot for uid, r in self.active.items()}
+        t0 = tel.now() if tel is not None else 0.0
         toks = jnp.asarray(self.last_token, jnp.int32)
         iv = self._inject_vec()
         self.sentinel.observe("decode", (self.n_slots, iv is not None))
@@ -1436,6 +1498,9 @@ class ServingEngine:
             self._append_token(req, t)
         self.engine_steps += 1
         self.emitted_tokens += len(emitted)
+        if tel is not None:
+            tel.on_step("decode", {u: 1 for u in emitted}, slot_of,
+                        tel.now() - t0, step_idx)
         return emitted
 
     def _spec_step(self) -> Dict[int, List[int]]:
@@ -1451,6 +1516,11 @@ class ServingEngine:
         if not self.active:
             return {}
         gamma = self.spec.gamma
+        tel = self.telemetry
+        step_idx = self.engine_steps
+        slot_of = {uid: r.slot for uid, r in self.active.items()}
+        accepted_ks: List[int] = []
+        t0 = tel.now() if tel is not None else 0.0
         # per-slot fill BEFORE the window: prompt + appended tokens minus
         # the pending last_token (whose K/V the window itself writes)
         base_fill = {uid: self._fill(r) for uid, r in self.active.items()}
@@ -1512,6 +1582,7 @@ class ServingEngine:
             self.spec_drafted += gamma
             self.spec_accepted += k
             self.emitted_tokens += len(appended)
+            accepted_ks.append(k)
             lens[s] = 0 if req.done else base_fill[uid] + len(appended)
         self.engine_steps += 1
 
@@ -1520,6 +1591,15 @@ class ServingEngine:
             self.cache = self._rollback(self.cache, lens_j)
             self.draft_cache = self._rollback(self.draft_cache, lens_j)
         self._repin_cache()
+        if tel is not None:
+            tel.on_step("spec", {u: len(v) for u, v in emitted.items()},
+                        slot_of, tel.now() - t0, step_idx,
+                        window=speculative.window_summary(gamma,
+                                                          accepted_ks))
+            for k in accepted_ks:
+                tel.registry.histogram(
+                    "spec_accepted_per_window", lo=0.5,
+                    hi=float(max(gamma + 1, 2)), per_decade=16).observe(k)
         return emitted
 
     def run_to_completion(self, max_steps: int = 256, strict: bool = True,
@@ -1593,6 +1673,7 @@ class ServingEngine:
             # lifecycle: queue + terminal-state + preemption accounting
             "queued": len(self.queue),
             "queue_depth": self.queue.depth,
+            "queue_peak_depth": self.queue.peak_depth,
             "guards": self.guards,
             "on_pressure": self.on_pressure,
             "preemptions": self.preemptions,
@@ -1639,6 +1720,8 @@ class ServingEngine:
                 "prefix_shared_tokens": self.prefix_shared_tokens,
                 "cow_copies": self.cow_copies,
                 "page_evictions": self.page_evictions,
+                "pages_allocated_total": self.allocator.pages_allocated_total,
+                "pages_freed_total": self.allocator.pages_freed_total,
                 "registry_entries": (len(self.prefix_registry)
                                      if self.prefix_registry is not None
                                      else 0),
@@ -1656,3 +1739,13 @@ class ServingEngine:
                 "verify_traces": self.verify_traces,
             })
         return out
+
+    def metrics(self) -> MetricsRegistry:
+        """The ONE uniform metrics surface: every ``stats()`` number —
+        spec counters, paged byte ladder, lifecycle tallies — projected
+        onto the telemetry registry as ``serve.*`` gauges (joining the
+        span-derived histograms/timelines when a recorder is attached).
+        ``launch/serve.py --stats`` renders this."""
+        reg = (self.telemetry.registry if self.telemetry is not None
+               else MetricsRegistry())
+        return registry_from_stats(self.stats(), reg)

@@ -187,6 +187,7 @@ class AdmissionQueue:
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
         self.depth = depth
+        self.peak_depth = 0               # high-water mark (telemetry)
         self._items: List[tuple] = []     # (order, request)
         self._next_order = 0
         self._front_order = -1
@@ -210,10 +211,12 @@ class AdmissionQueue:
                 f"rejected — backpressure, retry later or raise queue_depth")
         self._items.append((self._next_order, req))
         self._next_order += 1
+        self.peak_depth = max(self.peak_depth, len(self._items))
 
     def push_front(self, req) -> None:
         self._items.append((self._front_order, req))
         self._front_order -= 1
+        self.peak_depth = max(self.peak_depth, len(self._items))
 
     def expire(self, now: float) -> List:
         """Remove and return every queued request whose deadline passed —

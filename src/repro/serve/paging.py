@@ -71,6 +71,10 @@ class PageAllocator:
         self.page_size = int(page_size)
         self._free: Deque[int] = deque(range(self.n_pages))
         self._refs: Dict[int, int] = {}
+        # lifetime churn counters (telemetry/report surface): allocations
+        # and releases of page REFERENCES, monotone over the engine's life
+        self.pages_allocated_total = 0
+        self.pages_freed_total = 0
 
     # -- introspection -------------------------------------------------
     @property
@@ -105,6 +109,7 @@ class PageAllocator:
         pages = [self._free.popleft() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        self.pages_allocated_total += n
         return pages
 
     def retain(self, pages: Sequence[int]) -> None:
@@ -126,6 +131,7 @@ class PageAllocator:
             if rc == 1:
                 del self._refs[p]
                 self._free.append(p)
+                self.pages_freed_total += 1
             else:
                 self._refs[p] = rc - 1
 

@@ -102,3 +102,20 @@ def accept_greedy(draft: Sequence[int],
     while k < gamma and int(draft[k]) == int(target[k]):
         k += 1
     return k, [int(t) for t in draft[:k]] + [int(target[k])]
+
+
+def window_summary(gamma: int, accepted: Sequence[int]) -> dict:
+    """Aggregate one speculation window's per-slot acceptance counts for
+    the telemetry `step` event: proposed/accepted totals, the window's
+    acceptance rate, and the full-window count (slots that kept all γ
+    draft tokens).  Pure arithmetic — host-side, JSON-able."""
+    acc = [int(k) for k in accepted]
+    proposed = gamma * len(acc)
+    return {
+        "gamma": gamma,
+        "slots": len(acc),
+        "proposed": proposed,
+        "accepted": sum(acc),
+        "accept_rate": (sum(acc) / proposed) if proposed else 0.0,
+        "full_windows": sum(1 for k in acc if k == gamma),
+    }

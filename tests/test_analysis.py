@@ -211,6 +211,21 @@ def test_determinism_rule_is_scoped(tmp_path):
     assert not run_rules([REGISTRY["AST-DT1"]], ctx).findings
 
 
+def test_determinism_rule_telemetry_carveout(tmp_path):
+    """serve/telemetry.py is the ONE sanctioned clock source on serve
+    paths (DESIGN.md §13): a wall-clock read there is clean, while the
+    identical call in any OTHER repro/serve file still fires — both
+    directions pinned so the carve-out can neither widen nor silently
+    disable the rule."""
+    src = "import time\ndef monotonic():\n    return time.monotonic()\n"
+    ok = ast_context([_write(tmp_path, "repro/serve/telemetry.py", src)])
+    assert not run_rules([REGISTRY["AST-DT1"]], ok).findings
+    bad = ast_context([_write(tmp_path, "repro/serve/engine.py", src)])
+    rep = run_rules([REGISTRY["AST-DT1"]], bad)
+    assert rep.findings, "AST-DT1 went quiet outside the carve-out"
+    assert all(f.rule_id == "AST-DT1" for f in rep.findings)
+
+
 def test_donation_rule_clean_when_aliased():
     aliased = _mod("  %x = f32[8,16]{1,0} multiply(%w, %w)",
                    header="HloModule m, input_output_alias="

@@ -96,6 +96,23 @@ def test_admission_queue_bound_priority_and_expiry():
     b.deadline = 1.0
     assert [r.uid for r in q.expire(2.0)] == [1]
     assert len(q) == 0 and q.pop_best() is None
+    # peak depth is a high-water mark: the push_front burst set it to 3
+    # and draining does not reset it
+    assert q.peak_depth == 3
+
+
+def test_tokens_out_and_queue_peak_depth(fp_model):
+    """`tokens_out` on retired requests makes TPOT recomputable post-hoc
+    (telemetry report satellite); queue_peak_depth surfaces in stats()."""
+    eng = _engine(fp_model, queue_depth=4)
+    uids = [eng.submit(p, max_new_tokens=4)
+            for p in ([1, 2, 3], [4, 5, 6], [7, 8], [9, 10, 11])]
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    for u in uids:
+        assert fin[u].tokens_out == len(fin[u].tokens) > 0
+    assert eng.queue.peak_depth >= 2       # 4 requests over 2 slots queued
+    assert eng.stats()["queue_peak_depth"] == eng.queue.peak_depth
 
 
 def test_retry_policy_bounds_transient_faults():
