@@ -121,11 +121,20 @@ def compile_budgets(engine) -> Dict[str, int]:
         out["prefill"] = shapes
         if engine.spec is not None:
             out["draft_prefill"] = shapes
+    if getattr(engine, "chunked", None) is not None:
+        # chunk jits have a fixed token axis (chunk_tokens); only the
+        # batch bucket varies, and the chunk position is a traced scalar
+        out["chunk_prefill"] = _batch_buckets(engine.n_slots)
+        if engine.spec is not None:
+            out["draft_chunk_prefill"] = _batch_buckets(engine.n_slots)
     # decode: the batched step shape plus the batch-1 resume replay
     out["decode"] = 2
     if engine.spec is not None:
         out["draft_decode"] = 2
-        out["verify"] = 1
+        # one verify span shape per distinct γ the engine may run — the
+        # degradation ladder's spec_half rung adds ceil(γ/2)
+        out["verify"] = max(1, len(getattr(engine, "verify_gammas",
+                                           {engine.spec.gamma})))
     return out
 
 
@@ -136,6 +145,10 @@ def trace_counts(engine) -> Dict[str, int]:
         out.update(draft_prefill=engine.draft_prefill_traces,
                    draft_decode=engine.draft_decode_traces,
                    verify=engine.verify_traces)
+    if getattr(engine, "chunked", None) is not None:
+        out["chunk_prefill"] = engine.chunk_prefill_traces
+        if engine.spec is not None:
+            out["draft_chunk_prefill"] = engine.draft_chunk_prefill_traces
     return out
 
 

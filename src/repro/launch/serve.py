@@ -45,8 +45,9 @@ from repro.core import APConfig, CLAQConfig, ORConfig
 from repro.data import calibration_set
 from repro.launch.quantize import claq_quantize, claq_quantize_with_draft
 from repro.models import api
-from repro.serve import (AdmissionRejected, FaultInjector, Replayer,
-                         RetryPolicy, ServingEngine, SpecConfig, StepClock,
+from repro.serve import (AdmissionController, AdmissionRejected,
+                         FaultInjector, Replayer, RetryPolicy, ServingEngine,
+                         SLOConfig, SpecConfig, StepClock, StepCostModel,
                          Telemetry, build_report, load_trace,
                          write_perfetto)
 
@@ -136,6 +137,26 @@ def main(argv=None):
     ap.add_argument("--deadline-ms", type=float, default=0,
                     help="per-request SLO deadline; expired work is "
                          "ABANDONED (queued or running), 0 = none")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked prefill: split admitted prompts' prefill "
+                         "into fixed chunks of this many tokens interleaved "
+                         "with decode (0 = monolithic; must divide "
+                         "--max-len; bitwise-identical token streams, "
+                         "DESIGN.md §14)")
+    ap.add_argument("--slo-ttft-p99-ms", type=float, default=0,
+                    help="attach the SLO-guarded admission controller "
+                         "defending this p99 TTFT target via the "
+                         "graceful-degradation ladder (0 = off)")
+    ap.add_argument("--controller-mode", choices=("admission", "full"),
+                    default="full",
+                    help="controller ladder: 'admission' = defer/shed "
+                         "only; 'full' adds spec_half/spec_off/kv_int8 "
+                         "degradation rungs (capability-gated)")
+    ap.add_argument("--cost-model", action="store_true",
+                    help="price each step from the work it ran (padded "
+                         "prefill tokens, decode/draft calls, verify "
+                         "span) and advance the virtual clock by it — "
+                         "implied by --slo-ttft-p99-ms")
     ap.add_argument("--guards", action="store_true",
                     help="fold a per-step finite check into the decode "
                          "jit; a non-finite row quarantines only its own "
@@ -245,6 +266,13 @@ def main(argv=None):
     telemetry = (Telemetry()
                  if (args.telemetry or args.replay_trace or args.report_json
                      or args.telemetry_trace) else None)
+    controller = None
+    if args.slo_ttft_p99_ms > 0:
+        controller = AdmissionController(
+            SLOConfig(ttft_p99_ms=args.slo_ttft_p99_ms),
+            mode=args.controller_mode)
+    cost_model = (StepCostModel()
+                  if args.cost_model or controller is not None else None)
     eng = ServingEngine(params, cfg, n_slots=args.slots,
                         max_len=args.max_len, min_bucket=args.min_bucket,
                         bucketing=not args.no_bucketing, mesh=mesh,
@@ -265,7 +293,16 @@ def main(argv=None):
                                   if args.kv_layout == "paged"
                                   and args.kv_dtype != "f32" else None),
                         verify_contracts=args.verify_contracts,
-                        telemetry=telemetry)
+                        telemetry=telemetry,
+                        chunked_prefill=args.chunk_tokens or None,
+                        controller=controller, cost_model=cost_model)
+    if controller is not None:
+        print(f"[serve] SLO controller: p99 TTFT target "
+              f"{args.slo_ttft_p99_ms:.0f}ms, ladder "
+              f"{'->'.join(controller.ladder)}")
+    if args.chunk_tokens:
+        print(f"[serve] chunked prefill: {args.chunk_tokens}-token chunks "
+              f"interleaved with decode")
     if args.verify_contracts:
         rep = eng.contract_report
         print(f"[serve] contracts: {len(rep.rules_run)} rules clean "

@@ -1,4 +1,8 @@
+from .admission import (AdmissionController,  # noqa: F401
+                        ControllerDecision, SLOConfig, StepCostModel)
 from .bucketing import BucketingPolicy, BucketStats  # noqa: F401
+from .chunked_prefill import (ChunkedPrefillConfig,  # noqa: F401
+                              PrefillGroup)
 from .engine import ServingEngine, Request  # noqa: F401
 from .faults import FaultInjector, nonfinite_rows  # noqa: F401
 from .lifecycle import (AdmissionQueue, AdmissionRejected,  # noqa: F401

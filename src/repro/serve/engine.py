@@ -161,7 +161,9 @@ from repro.models import modules as nn
 
 from . import lifecycle as lc
 from . import speculative
+from .admission import AdmissionController, StepCostModel
 from .bucketing import BucketingPolicy
+from .chunked_prefill import ChunkedPrefillConfig, PrefillGroup
 from .faults import FaultInjector, nonfinite_rows
 from .lifecycle import (AdmissionQueue, AdmissionRejected, DeadlineExceeded,
                         EngineFault, IncompleteRun, RequestState, RetryPolicy,
@@ -214,6 +216,10 @@ class Request:
     submitted_at: float = 0.0
     preemptions: int = 0                # times this request was preempted
     diagnostics: Optional[Dict[str, Any]] = None
+    kv_int8: bool = False               # admitted under the kv_int8 rung:
+                                        # prefill K/V carries int8-page
+                                        # numerics, so no fp resume replay
+                                        # can reproduce it (non-preemptible)
 
     @property
     def tokens_out(self) -> int:
@@ -323,7 +329,10 @@ class ServingEngine:
                  kv_dtype: Optional[str] = None,
                  share_prefixes: bool = True,
                  verify_contracts: bool = False,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 chunked_prefill=None,
+                 controller: Optional[AdmissionController] = None,
+                 cost_model: Optional[StepCostModel] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "ServingEngine serves decoder-only families; encdec "
@@ -440,6 +449,49 @@ class ServingEngine:
             min_bucket=min_bucket, max_len=max_len,
             enabled=(bucketing and cfg.family in _PADDED_FAMILIES
                      and cfg.attn_window is None))
+        # ---- chunked prefill (serve/chunked_prefill.py) ------------------
+        # The gate mirrors the bucketing/padding gate, but hard: chunking
+        # rides the model layers' uniform-fill prefill branch, which only
+        # the linear-cache padded families implement (moe's router couples
+        # rows; ring caches have no linear chunk positions).
+        self.chunked: Optional[ChunkedPrefillConfig] = None
+        if chunked_prefill is not None:
+            cpc = (chunked_prefill
+                   if isinstance(chunked_prefill, ChunkedPrefillConfig)
+                   else ChunkedPrefillConfig(chunk_tokens=int(chunked_prefill)))
+            if (cfg.family not in _PADDED_FAMILIES
+                    or cfg.attn_window is not None):
+                raise NotImplementedError(
+                    f"chunked prefill supports the padded linear-cache "
+                    f"families {_PADDED_FAMILIES} (family={cfg.family!r}, "
+                    f"attn_window={cfg.attn_window!r})")
+            if max_len % cpc.chunk_tokens:
+                raise ValueError(
+                    f"chunk_tokens={cpc.chunk_tokens} must divide max_len="
+                    f"{max_len}: the final chunk's dynamic_update_slice "
+                    f"would clamp past the cache end and shift real rows")
+            self.chunked = cpc
+        self._prefill_groups: List[PrefillGroup] = []
+        self.chunk_prefill_traces = 0
+        self.draft_chunk_prefill_traces = 0
+        self.chunks_processed = 0
+        # ---- overload control plane (serve/admission.py) -----------------
+        self.controller = controller
+        self.cost_model = cost_model
+        self.last_step_cost_ms: Optional[float] = None
+        self._step_prefill_tokens = 0
+        self._step_decode_calls = 0
+        self._step_draft_calls = 0
+        self._step_verify_tokens = 0
+        # Degradation-ladder knobs the controller drives; nominal values
+        # make an uncontrolled engine behave exactly as before.
+        self._gamma_eff = spec.gamma if spec is not None else 0
+        self._spec_enabled = spec is not None
+        self._kv_int8_admission = False
+        # Distinct speculative window sizes this engine may verify at —
+        # the verify compile budget (controller.attach adds γ//2 when the
+        # spec_half rung exists).
+        self.verify_gammas = {spec.gamma} if spec is not None else set()
         self._cache_kw: Dict[str, Any] = {}
         if self._paged:
             self._cache_kw = dict(page_size=self.page_size,
@@ -555,6 +607,37 @@ class ServingEngine:
 
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn)
+
+        # Chunked prefill: the operand shape is FIXED at (batch_bucket,
+        # chunk_tokens) and the chunk position rides the fragment cache's
+        # fill counter (the model's uniform-fill branch reads
+        # cache.length[0] as the append offset), so every chunk of every
+        # prompt at a given batch bucket shares ONE trace.  Logits are
+        # read per row at the position of the row's true last token IF it
+        # falls in this chunk (clipped otherwise; the host discards those
+        # rows) — same traced-logits_at idea as the monolithic prefill.
+        if self.chunked is not None:
+            C = self.chunked.chunk_tokens
+
+            def _chunk_prefill_fn(p, t, c, lens, start):
+                self.chunk_prefill_traces += 1
+                with nn.activation_quant(self.act_dtype):
+                    logits, cache = api.prefill_step(
+                        p, cfg, {"tokens": t}, c,
+                        logits_at=jnp.clip(lens - 1 - start, 0, C - 1))
+                nf = nonfinite_rows(logits) if self.guards else None
+                return logits, cache, nf
+
+            self._chunk_prefill = jax.jit(_chunk_prefill_fn)
+            if spec is not None:
+                def _draft_chunk_prefill_fn(p, t, c):
+                    self.draft_chunk_prefill_traces += 1
+                    # cache only, like the monolithic draft prefill
+                    with nn.activation_quant(self.act_dtype):
+                        _, cache = api.prefill_step(p, cfg, {"tokens": t}, c)
+                    return cache
+
+                self._draft_chunk_prefill = jax.jit(_draft_chunk_prefill_fn)
         # One rollback trace serves every cache with the engine's treedef
         # (target and draft alike) and doubles as the preemption slot
         # clear; per-slot lengths are traced, so acceptance/eviction
@@ -620,6 +703,13 @@ class ServingEngine:
             self._draft_decode = jax.jit(_draft_decode_fn)
             self._draft_prefill = jax.jit(_draft_prefill_fn)
             self._verify = jax.jit(_verify_fn)
+
+        # Attach the SLO controller last: it reads the engine's realized
+        # capabilities (spec, kv_dtype) to build its degradation ladder,
+        # and may extend verify_gammas — so this must precede the contract
+        # gate below, whose compile budgets read that set.
+        if controller is not None:
+            controller.attach(self)
 
         # Opt-in contract gate: lower+compile the decode path NOW and run
         # the compiled-artifact rules against it (plus a dense dequantized
@@ -946,7 +1036,12 @@ class ServingEngine:
 
     def _admit(self, reqs: List[Request]) -> None:
         """Prefill-admit fresh requests into free slots, grouped by length
-        bucket (one batched prefill per group; moe one per prefill)."""
+        bucket (one batched prefill per group; moe one per prefill).
+        Chunked engines route to ``_admit_chunked``: slots are reserved
+        now, prefill happens chunk by chunk across subsequent steps."""
+        if self.chunked is not None:
+            self._admit_chunked(reqs)
+            return
         # moe prefill rows are coupled through router capacity (a row's
         # tokens change which of another row's tokens are dropped), so moe
         # admissions run one per prefill to match per-request admission;
@@ -1005,6 +1100,19 @@ class ServingEngine:
                     self.sentinel.observe("draft_prefill", (Bb, bucket))
                     dcache_b = self._draft_prefill(
                         self.draft_params, jnp.asarray(toks), dcache_b)
+            self._step_prefill_tokens += Bb * bucket * (
+                2 if self.spec is not None else 1)
+            if self._kv_int8_admission:
+                # kv_int8 degradation rung: admit through int8 resident-page
+                # numerics.  Skip the fake-quant when the pool is already
+                # int8 (insertion quantizes anyway); always mark the request
+                # so preemption treats it as non-resumable.
+                for i in idxs:
+                    reqs[i].kv_int8 = True
+                if self.kv_dtype != "int8":
+                    cache_b = self._fake_quant_frag(cache_b)
+                    if self.spec is not None:
+                        dcache_b = self._fake_quant_frag(dcache_b)
             firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             nf_h = np.asarray(nf) if nf is not None else None
             slots = [self.free.pop(0) for _ in idxs]
@@ -1048,6 +1156,235 @@ class ServingEngine:
                     self._quarantine(req, "prefill", int(nf_h[r]))
                 else:
                     self._append_token(req, int(firsts[r]))
+
+    # ------------------------------------------------------- chunked prefill
+    def _admit_chunked(self, reqs: List[Request]) -> None:
+        """Reserve slots and open a ``PrefillGroup``: the prompts prefill
+        chunk by chunk across subsequent steps (``_process_chunks``) and
+        the batched cache is only written at completion, so a
+        mid-``PREFILLING`` preempt needs no rollback.  Paged pools reserve
+        every page up front with the same all-or-nothing unwind as
+        ``_admit``."""
+        plans: Dict[int, Any] = {}
+        if self._paged:
+            try:
+                for req in reqs:
+                    plans[req.uid] = self._plan_pages(req, len(req.prompt))
+            except PoolExhausted:
+                for pages, _, _ in plans.values():
+                    self.allocator.free(pages)
+                raise
+        tel = self.telemetry
+        B = len(reqs)
+        Bb = min(1 << (B - 1).bit_length(), self.n_slots)
+        frag = api.make_cache(self.cfg, Bb, self.max_len,
+                              dtype=self._cache_dtype)
+        draft_frag = None
+        if self.spec is not None:
+            draft_frag = api.make_cache(self.cfg, Bb, self.max_len,
+                                        dtype=self._cache_dtype)
+        slots = [self.free.pop(0) for _ in reqs]
+        group = PrefillGroup(
+            reqs=list(reqs), slots=slots,
+            lens=[len(r.prompt) for r in reqs], bb=Bb, frag=frag,
+            draft_frag=draft_frag, plans=plans,
+            t0=tel.now() if tel is not None else 0.0)
+        for req, slot in zip(reqs, slots):
+            req.slot = slot
+            req.transition(RequestState.PREFILLING)
+            if self._paged:
+                # pages live in _req_pages from reservation on, so the
+                # one release path covers cancel mid-prefill and retire
+                self._req_pages[req.uid] = list(plans[req.uid][0])
+        self._prefill_groups.append(group)
+
+    @property
+    def pending_prefills(self) -> int:
+        """Live requests currently mid-chunked-prefill."""
+        return sum(len(g.live_rows()) for g in self._prefill_groups)
+
+    @property
+    def prefill_backlog_tokens(self) -> int:
+        """Padded prefill tokens still owed to pending groups — the
+        controller's defer signal."""
+        if self.chunked is None:
+            return 0
+        C = self.chunked.chunk_tokens
+        return sum(g.bb * C * g.chunks_remaining(C)
+                   for g in self._prefill_groups)
+
+    def _process_chunks(self) -> None:
+        """Advance pending prefill groups by whole chunks, head group
+        first, under the per-step padded-token budget (controller budget
+        when attached, else the config's).  At least one chunk runs per
+        step — progress is unconditional — and a group that finishes is
+        completed immediately so its first tokens land this step."""
+        if not self._prefill_groups:
+            return
+        C = self.chunked.chunk_tokens
+        if self.controller is not None:
+            budget = self.controller.prefill_budget()
+        else:
+            budget = self.chunked.budget_tokens
+        spent = 0
+        progressed = False
+        while self._prefill_groups:
+            g = self._prefill_groups[0]
+            if not g.live_rows() or g.done:
+                self._prefill_groups.pop(0)
+                self._finish_group(g)
+                continue
+            cost = g.bb * C
+            if budget is not None and progressed and spent + cost > budget:
+                break
+            self._run_chunk(g, C)
+            spent += cost
+            progressed = True
+            if g.done:
+                self._prefill_groups.pop(0)
+                self._finish_group(g)
+
+    def _run_chunk(self, g: PrefillGroup, C: int) -> None:
+        """Run one ``(bb, C)`` chunk for a group: every live row advances
+        C positions in the fragment cache.  Rows whose TRUE last prompt
+        token falls inside this chunk stash their first-token argmax (and
+        guard verdict) for completion; other rows' chunk logits are
+        bucketing garbage and are ignored, exactly as monolithic prefill
+        ignores all but the last position."""
+        start = g.progress
+        toks = np.zeros((g.bb, C), np.int32)
+        for i in g.live_rows():
+            seg = g.reqs[i].prompt[start:start + C]
+            toks[i, :len(seg)] = seg
+        lens = np.ones((g.bb,), np.int32)
+        for i, n in enumerate(g.lens):
+            lens[i] = n
+        self.sentinel.observe("chunk_prefill", (g.bb, C))
+        with self._mesh_scope():
+            logits, g.frag, nf = self._chunk_prefill(
+                self.params, jnp.asarray(toks), g.frag, jnp.asarray(lens),
+                jnp.asarray(start, jnp.int32))
+            if self.spec is not None:
+                self.sentinel.observe("draft_chunk_prefill", (g.bb, C))
+                g.draft_frag = self._draft_chunk_prefill(
+                    self.draft_params, jnp.asarray(toks), g.draft_frag)
+        g.progress = start + C
+        self.chunks_processed += 1
+        self._step_prefill_tokens += g.bb * C * (
+            2 if self.spec is not None else 1)
+        fin = [i for i in g.live_rows() if start <= g.lens[i] - 1 < start + C]
+        if fin:
+            firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            nf_h = np.asarray(nf) if nf is not None else None
+            for i in fin:
+                g.firsts[i] = int(firsts[i])
+                if nf_h is not None:
+                    g.nf[i] = int(nf_h[i])
+        if self.telemetry is not None:
+            live = g.live_rows()
+            self.telemetry.on_chunk(
+                [g.reqs[i].uid for i in live],
+                [g.slots[i] for i in live], start, C, g.bb,
+                self.engine_steps)
+
+    def _finish_group(self, g: PrefillGroup) -> None:
+        """Complete a finished group: insert the fragment rows of every
+        surviving member into the batched cache (the same masked insert /
+        paged scatter as monolithic admission), transition them
+        PREFILLING -> RUNNING, and release their stashed first tokens."""
+        rows = g.live_rows()
+        if not rows:
+            return
+        tel = self.telemetry
+        reqs = [g.reqs[i] for i in rows]
+        slots = [g.slots[i] for i in rows]
+        lens = [g.lens[i] for i in rows]
+        idx = jnp.asarray(rows, jnp.int32)
+
+        def take(path, leaf):
+            del path
+            return leaf[idx] if leaf.ndim == 1 else leaf[:, idx]
+
+        sel = jax.tree_util.tree_map_with_path(take, g.frag)
+        dsel = None
+        if g.draft_frag is not None:
+            dsel = jax.tree_util.tree_map_with_path(take, g.draft_frag)
+        if self._kv_int8_admission:
+            for req in reqs:
+                req.kv_int8 = True
+            if self.kv_dtype != "int8":
+                sel = self._fake_quant_frag(sel)
+                if dsel is not None:
+                    dsel = self._fake_quant_frag(dsel)
+        if self._paged:
+            wrows = np.stack([g.plans[r.uid][2] for r in reqs])
+            self.cache = self._paged_insert(self.cache, sel, slots, lens,
+                                            wrows)
+            if dsel is not None:
+                self.draft_cache = self._paged_insert(
+                    self.draft_cache, dsel, slots, lens, wrows)
+            for req, slot in zip(reqs, slots):
+                pages, row, _ = g.plans[req.uid]
+                self._tables[slot] = row
+                # real data only lands in the pages NOW — registering the
+                # prefix any earlier would let a sharer read garbage
+                if self.prefix_registry is not None:
+                    self.prefix_registry.register(req.prompt, pages)
+                self._note_page_peaks(req)
+            self._tables_dirty = True
+        else:
+            # always masked: the fragment fill is chunk-padded past each
+            # row's true length, so the tail must be zeroed on insert
+            self.cache = _masked_group_insert(self.cache, sel, slots, lens,
+                                              True)
+            if dsel is not None:
+                self.draft_cache = _masked_group_insert(
+                    self.draft_cache, dsel, slots, lens, True)
+        self._repin_cache()
+        if tel is not None:
+            tel.on_admit([r.uid for r in reqs], slots, g.progress, g.bb,
+                         tel.now() - g.t0, self.engine_steps)
+        for req, i in zip(reqs, rows):
+            req.transition(RequestState.RUNNING)
+            self.active[req.uid] = req
+            nfc = g.nf.get(i, 0)
+            if nfc > 0:
+                self._quarantine(req, "prefill", nfc)
+            else:
+                self._append_token(req, g.firsts[i])
+
+    def _fake_quant_frag(self, frag):
+        """Round-trip a fragment cache's sequence leaves through the int8
+        resident-page numerics (per-token-row absmax/127, the same
+        quantizer the paged pool applies on write) — the kv_int8
+        degradation rung's cheaper operating point for fp pools."""
+        def fq(path, leaf):
+            if getattr(path[-1], "name", None) in _SEQ_LEAVES:
+                flat = leaf.reshape(leaf.shape[:3] + (-1,)).astype(
+                    jnp.float32)
+                xq, sc = kops.quantize_activations(flat)
+                deq = (xq.astype(jnp.float32) * sc).reshape(leaf.shape)
+                return deq.astype(leaf.dtype)
+            return leaf
+        return jax.tree_util.tree_map_with_path(fq, frag)
+
+    def _preempt_prefilling(self, req: Request, reason: str) -> None:
+        """Preempt a mid-``PREFILLING`` request: drop its fragment
+        progress and re-queue at the front.  No cache rollback — the
+        batched slot row was never written (insertion happens only at
+        completion), so the only state to unwind is the reservation.
+        Caller must have cancelled it from its group first."""
+        if self.telemetry is not None:
+            self.telemetry.on_preempt([(req.uid, req.slot)], reason,
+                                      self.engine_steps)
+        req.transition(RequestState.PREEMPTED)
+        req.preemptions += 1
+        self.preemptions += 1
+        self._release_pages(req)
+        self.free.append(req.slot)
+        req.slot = -1
+        req.transition(RequestState.QUEUED)
+        self.queue.push_front(req)
 
     def _admit_resume(self, req: Request) -> None:
         """Resume a preempted request into a free slot, bit-identically to
@@ -1105,10 +1442,14 @@ class ServingEngine:
                 tok = jnp.asarray([t], jnp.int32)
                 self.sentinel.observe("decode", (1, riv is not None))
                 _, cache_b, _ = self._decode(self.params, tok, cache_b, riv)
+                self._step_decode_calls += 1
                 if self.spec is not None:
                     self.sentinel.observe("draft_decode", (1,))
                     _, dcache_b = self._draft_decode(self.draft_params, tok,
                                                      dcache_b)
+                    self._step_draft_calls += 1
+        self._step_prefill_tokens += bucket * (
+            2 if self.spec is not None else 1)
         slot = self.free.pop(0)
         if self._paged:
             pages, row, wrow = plan
@@ -1344,7 +1685,33 @@ class ServingEngine:
                 self._retire(req, RequestState.ABANDONED, diagnostics={
                     "kind": "deadline", "where": "running",
                     "engine_step": step_idx})
+        for g in self._prefill_groups:
+            for i in g.live_rows():
+                req = g.reqs[i]
+                if req.deadline is not None and now >= req.deadline:
+                    g.cancel(req.uid)
+                    self._retire(req, RequestState.ABANDONED, diagnostics={
+                        "kind": "deadline", "where": "prefilling",
+                        "engine_step": step_idx})
         limit = self._effective_limit(step_idx)
+        # cache pressure reaches mid-PREFILLING work too: a prompt that no
+        # longer fits under the effective limit is cancelled from its group
+        # (preempt-to-queue when policy and numerics allow — free, since
+        # the slot row was never written — else typed truncation)
+        for g in self._prefill_groups:
+            for i in g.live_rows():
+                req = g.reqs[i]
+                if len(req.prompt) >= limit:
+                    g.cancel(req.uid)
+                    if (self.on_pressure == "preempt" and self._preemptible
+                            and not req.kv_int8):
+                        self._preempt_prefilling(req, "cache_pressure")
+                    else:
+                        self._retire(req, RequestState.TRUNCATED,
+                                     diagnostics={
+                                         "kind": "cache_pressure",
+                                         "limit": limit,
+                                         "engine_step": step_idx})
         victims: List[Request] = []
         for req in self._victim_order():
             fill = self._fill(req)
@@ -1363,6 +1730,10 @@ class ServingEngine:
                         "engine_step": step_idx})
         if victims:
             self._preempt(victims, reason="cache_pressure")
+        if self.controller is not None:
+            # the controller decides BEFORE admission: rung moves and
+            # shedding apply to the queue this pump is about to drain
+            self.controller.on_step(self)
         self._pump_queue(now, limit)
 
     def _pump_queue(self, now: float, limit: int) -> None:
@@ -1376,16 +1747,22 @@ class ServingEngine:
         while (len(self.queue) and not self.free and self._preemptible
                and self.on_pressure == "preempt"):
             best = self.queue.peek_best(lambda r: self._admissible(r, limit))
-            victims = self._victim_order()
+            victims = [r for r in self._victim_order() if not r.kv_int8]
             if (best is None or not victims
                     or best.priority <= victims[0].priority):
                 break
             self._preempt([victims[0]], reason="priority")
         # admit: resumed requests one by one (each replays its own prefix),
-        # fresh requests collected and admitted in one bucketed batch
+        # fresh requests collected and admitted in one bucketed batch.
+        # Under controller deferral only resumed work passes (its slot
+        # debt already exists; deferring it would strand generated tokens).
+        allow_fresh = (self.controller.allow_fresh(self)
+                       if self.controller is not None else True)
         fresh: List[Request] = []
         while len(self.free) - len(fresh) > 0:
-            req = self.queue.pop_best(lambda r: self._admissible(r, limit))
+            req = self.queue.pop_best(
+                lambda r: self._admissible(r, limit)
+                and (allow_fresh or r.tokens))
             if req is None:
                 break
             if req.tokens:
@@ -1404,6 +1781,11 @@ class ServingEngine:
             except PoolExhausted:
                 for r in reversed(fresh):
                     self.queue.push_front(r)
+        if self.controller is not None and not allow_fresh and self.free:
+            blocked = sum(1 for r in self.queue.requests()
+                          if not r.tokens and self._admissible(r, limit))
+            if blocked:
+                self.controller.note_defer(self, blocked)
 
     def _tick(self) -> None:
         """Per-step lifecycle prologue.  A planned transient fault raises
@@ -1443,8 +1825,31 @@ class ServingEngine:
         greedy decode would have emitted (greedy speculation is
         lossless).  Quarantined (guard-failed) requests emit nothing and
         are absent from the returned dict — drain them via
-        ``take_finished()``."""
+        ``take_finished()``.
+
+        With a ``cost_model``, the step's deterministic virtual cost is
+        published as ``last_step_cost_ms`` (the replayer advances its
+        ``StepClock`` by it, so chunking actually buys tail latency
+        under virtual time instead of being free)."""
+        self._step_prefill_tokens = 0
+        self._step_decode_calls = 0
+        self._step_draft_calls = 0
+        self._step_verify_tokens = 0
+        out = self._step_inner()
+        if self.cost_model is not None:
+            self.last_step_cost_ms = self.cost_model.cost_ms(
+                prefill_tokens=self._step_prefill_tokens,
+                decode_calls=self._step_decode_calls,
+                draft_calls=self._step_draft_calls,
+                verify_tokens=self._step_verify_tokens)
+        return out
+
+    def _step_inner(self) -> Dict[int, Any]:
         self._tick()
+        if self.chunked is not None:
+            # interleave pending prefill chunks BEFORE decode: completed
+            # groups join `active` and decode this very step
+            self._process_chunks()
         tel = self.telemetry
         if tel is not None:
             # per-step occupancy gauges (same-step samples overwrite, so
@@ -1455,7 +1860,7 @@ class ServingEngine:
                 tel.sample("pages_in_use", self.engine_steps,
                            self.allocator.pages_in_use)
         if not self.active:
-            if len(self.queue):
+            if len(self.queue) or self._prefill_groups:
                 # idle step with pending work: step-indexed fault plans
                 # (pressure windows, planned failures) must still elapse,
                 # or queued-but-inadmissible work would livelock
@@ -1465,14 +1870,15 @@ class ServingEngine:
             # reserve (zeroed, private) pages for every K/V write this
             # step will issue — one for vanilla decode, the whole window
             # for speculation — then push the dirty table mirror
-            self._ensure_capacity(1 if self.spec is None
-                                  else self.spec.gamma + 1)
+            self._ensure_capacity(
+                self._gamma_eff + 1
+                if self.spec is not None and self._spec_enabled else 1)
             if not self.active:
-                if len(self.queue):
+                if len(self.queue) or self._prefill_groups:
                     self.engine_steps += 1
                 return {}
             self._sync_tables()
-        if self.spec is not None:
+        if self.spec is not None and self._spec_enabled:
             return self._spec_step()
         step_idx = self.engine_steps
         slot_of = {uid: r.slot for uid, r in self.active.items()}
@@ -1483,6 +1889,15 @@ class ServingEngine:
         with self._mesh_scope():
             logits, self.cache, nf = self._decode(self.params, toks,
                                                   self.cache, iv)
+            if self.spec is not None:
+                # spec-off degradation rung keep-warm: advance the draft
+                # cache with the SAME token so both caches stay uniformly
+                # filled and re-enabling speculation is seamless
+                self.sentinel.observe("draft_decode", (self.n_slots,))
+                _, self.draft_cache = self._draft_decode(
+                    self.draft_params, toks, self.draft_cache)
+                self._step_draft_calls += 1
+        self._step_decode_calls += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         nf_h = np.asarray(nf) if nf is not None else None
         emitted = {}
@@ -1515,7 +1930,9 @@ class ServingEngine:
         quarantined — rollback, then quarantine."""
         if not self.active:
             return {}
-        gamma = self.spec.gamma
+        # γ_eff: the controller's spec_half rung halves the window without
+        # re-tracing (verify is compiled per distinct γ at build time)
+        gamma = self._gamma_eff
         tel = self.telemetry
         step_idx = self.engine_steps
         slot_of = {uid: r.slot for uid, r in self.active.items()}
@@ -1550,6 +1967,8 @@ class ServingEngine:
                 "verify", (self.n_slots, gamma + 1, iv is not None))
             vlogits, self.cache, nf = self._verify(self.params, span,
                                                    self.cache, iv)
+        self._step_draft_calls += gamma + 1
+        self._step_verify_tokens += gamma + 1
         drafts = np.asarray(drafts_j)
         greedy = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
         nf_h = np.asarray(nf) if nf is not None else None
@@ -1617,7 +2036,8 @@ class ServingEngine:
         consecutive_faults = 0
         steps = 0
         while steps < max_steps:
-            if not self.active and not len(self.queue):
+            if (not self.active and not len(self.queue)
+                    and not self._prefill_groups):
                 return []
             try:
                 self.step()
@@ -1634,10 +2054,13 @@ class ServingEngine:
                 continue
             consecutive_faults = 0
             steps += 1
-        unfinished = sorted(set(self.active) | set(self.queue.uids()))
+        prefilling = [r for g in self._prefill_groups for r in g.live()]
+        unfinished = sorted(set(self.active) | set(self.queue.uids())
+                            | {r.uid for r in prefilling})
         if unfinished and strict:
             reqs = dict(self.active)
             reqs.update({r.uid: r for r in self.queue.requests()})
+            reqs.update({r.uid: r for r in prefilling})
             raise IncompleteRun(
                 f"run_to_completion: max_steps={max_steps} exhausted with "
                 f"{len(unfinished)} requests not terminal (uids "
@@ -1729,6 +2152,8 @@ class ServingEngine:
         if self.spec is not None:
             out.update({
                 "spec_gamma": self.spec.gamma,
+                "spec_gamma_eff": self._gamma_eff,
+                "spec_enabled": self._spec_enabled,
                 "spec_drafted": self.spec_drafted,
                 "spec_accepted": self.spec_accepted,
                 # fraction of proposed draft tokens the target kept
@@ -1738,7 +2163,31 @@ class ServingEngine:
                 "draft_decode_traces": self.draft_decode_traces,
                 "verify_traces": self.verify_traces,
             })
+        if self.chunked is not None:
+            out["chunked"] = {
+                "chunk_tokens": self.chunked.chunk_tokens,
+                "budget_tokens": self.chunked.budget_tokens,
+                "chunk_prefill_traces": self.chunk_prefill_traces,
+                "draft_chunk_prefill_traces": self.draft_chunk_prefill_traces,
+                "chunks_processed": self.chunks_processed,
+                "groups_pending": len(self._prefill_groups),
+                "prefilling": self.pending_prefills,
+            }
+        if self.last_step_cost_ms is not None:
+            out["last_step_cost_ms"] = self.last_step_cost_ms
+        if self.controller is not None:
+            out["controller"] = self.controller.stats()
         return out
+
+    def reset_peaks(self) -> None:
+        """Drop high-water marks (queue depth, page peaks) to CURRENT
+        occupancy.  Back-to-back A/B replays share one process; without
+        this the second run's report inherits the first run's peaks."""
+        self.queue.reset_peaks()
+        if self._paged:
+            self.peak_pages_in_use = self.allocator.pages_in_use
+            self.peak_pages_per_request = max(
+                (len(p) for p in self._req_pages.values()), default=0)
 
     def metrics(self) -> MetricsRegistry:
         """The ONE uniform metrics surface: every ``stats()`` number —

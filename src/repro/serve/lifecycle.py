@@ -5,6 +5,8 @@ A production serving claim needs a failure model, not just a fast path.
 This module gives every request an explicit lifecycle,
 
     QUEUED -> RUNNING -> {FINISHED, TRUNCATED, ABANDONED, FAILED, PREEMPTED}
+    QUEUED -> PREFILLING -> RUNNING   (chunked prefill: slot reserved, cache
+    PREFILLING -> {PREEMPTED, ...}     filling chunk by chunk)
     PREEMPTED -> QUEUED            (preempted work re-queues and resumes)
 
 with transitions enforced (an illegal transition is a bug and raises
@@ -46,6 +48,7 @@ from typing import Callable, Dict, List, Optional
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"
     RUNNING = "running"
     FINISHED = "finished"
     TRUNCATED = "truncated"
@@ -62,7 +65,12 @@ TERMINAL_STATES = frozenset({
 # Legal lifecycle transitions; anything else is an engine bug.
 _TRANSITIONS: Dict[RequestState, frozenset] = {
     RequestState.QUEUED: frozenset({
-        RequestState.RUNNING, RequestState.ABANDONED, RequestState.FAILED}),
+        RequestState.RUNNING, RequestState.PREFILLING,
+        RequestState.ABANDONED, RequestState.FAILED}),
+    RequestState.PREFILLING: frozenset({
+        RequestState.RUNNING, RequestState.PREEMPTED,
+        RequestState.TRUNCATED,
+        RequestState.ABANDONED, RequestState.FAILED}),
     RequestState.RUNNING: frozenset({
         RequestState.FINISHED, RequestState.TRUNCATED,
         RequestState.ABANDONED, RequestState.FAILED,
@@ -243,3 +251,24 @@ class AdmissionQueue:
         if best is not None:
             self._items = [(o, r) for o, r in self._items if r is not best]
         return best
+
+    def pop_worst(self, admissible=None):
+        """Remove and return the LOWEST-ranked admissible request — the
+        load-shedding victim.  Rank order is the exact reverse of
+        ``pop_best``, so fresh low-priority work sheds before anything
+        preempted (preempted entries carry negative order and outrank
+        fresh arrivals at the same priority)."""
+        worst = None
+        for _, r in reversed(self._ranked()):
+            if admissible is None or admissible(r):
+                worst = r
+                break
+        if worst is not None:
+            self._items = [(o, r) for o, r in self._items if r is not worst]
+        return worst
+
+    def reset_peaks(self) -> None:
+        """Drop the high-water mark to the CURRENT depth.  Back-to-back A/B
+        replays reuse one process; without an explicit reset the second
+        run's report inherits the first run's peak."""
+        self.peak_depth = len(self._items)

@@ -148,6 +148,9 @@ class Replayer:
 
     def run(self) -> Optional[Dict[str, Any]]:
         eng = self.engine
+        # back-to-back A/B replays may reuse one engine/process: peaks
+        # (queue depth, page occupancy) must not leak across runs
+        eng.reset_peaks()
         clock = eng.clock
         step_clock = isinstance(clock, StepClock)
         t0 = clock()
@@ -186,10 +189,15 @@ class Replayer:
             else:
                 eng.step()
             if step_clock:
-                clock.advance()
+                # with a StepCostModel the virtual clock advances by the
+                # step's modeled cost, so scheduling decisions (chunking,
+                # degradation) move the TTFT/TPOT percentiles exactly as
+                # wall time would; without one, the PR 9 fixed advance
+                clock.advance(eng.last_step_cost_ms)
             steps += 1
             drained = (i >= len(self.trace) and not pending
-                       and not eng.active and not len(eng.queue))
+                       and not eng.active and not len(eng.queue)
+                       and not eng.pending_prefills)
             if drained:
                 break
             if steps >= self.max_steps:
@@ -290,6 +298,13 @@ def build_report(engine, elapsed: float, driver_steps: Optional[int] = None,
         report["spec"] = {k: st[k] for k in (
             "spec_gamma", "spec_drafted", "spec_accepted",
             "acceptance_rate")}
+    if "chunked" in st:
+        report["chunked"] = dict(st["chunked"])
+    if "controller" in st:
+        report["controller"] = dict(st["controller"])
+        ctl = getattr(engine, "controller", None)
+        if ctl is not None:
+            report["controller"]["decision_log"] = ctl.decision_log()
     return report
 
 
@@ -362,7 +377,9 @@ def validate_report(report: Dict[str, Any]) -> Dict[str, Any]:
 
 def _smoke_engine(telemetry: Optional[Telemetry], seed: int,
                   verify_contracts: bool, n_slots: int, max_len: int,
-                  faults: bool):
+                  faults: bool, chunk_tokens: Optional[int] = None,
+                  controller=None, cost_model=None,
+                  queue_depth: Optional[int] = None):
     """A small fp dense engine for the CI replay-smoke step — jax is
     imported here, not at module load, so trace tooling stays cheap."""
     import jax
@@ -384,7 +401,90 @@ def _smoke_engine(telemetry: Optional[Telemetry], seed: int,
     return ServingEngine(
         params, cfg, n_slots=n_slots, max_len=max_len, min_bucket=8,
         clock=StepClock(10.0), telemetry=telemetry, faults=inj,
-        on_pressure="preempt", verify_contracts=verify_contracts)
+        on_pressure="preempt", verify_contracts=verify_contracts,
+        chunked_prefill=chunk_tokens, controller=controller,
+        cost_model=cost_model, queue_depth=queue_depth)
+
+
+def overload_trace(seed: int, steps: int = 32,
+                   vocab: int = 128) -> List[Arrival]:
+    """The seeded burst trace the overload-smoke / bench A/B rides:
+    long prompts arriving in bursts, no deadlines (abandonment must be
+    the CONTROLLER's decision, not the trace's)."""
+    return synthesize_trace(seed=seed, steps=steps, vocab=vocab,
+                            arrival_lambda=1.4, burst_every=4,
+                            burst_size=7, prompt_len=(20, 36),
+                            max_new=(4, 8), deadline_frac=0.0)
+
+
+def _overload_ab(args) -> int:
+    """--slo-ttft-p99-ms: replay the SAME seeded burst trace twice —
+    uncontrolled baseline vs SLO-guarded (chunked prefill + degradation
+    ladder) — under the SAME step-cost model, and hold the guarded run
+    to the target the baseline blows."""
+    from .admission import AdmissionController, SLOConfig, StepCostModel
+    target = args.slo_ttft_p99_ms
+    trace = overload_trace(args.seed, steps=max(args.steps, 40))
+    cost = StepCostModel()
+    # the bounded default queue (2*n_slots) would cap queue wait — and
+    # therefore TTFT — via submit backpressure, hiding the overload the
+    # controller exists to manage; both sides get the same deep queue
+    depth = 16 * args.slots
+    tel_base = Telemetry()
+    base = _smoke_engine(tel_base, args.seed, False, args.slots,
+                         args.max_len, False, cost_model=cost,
+                         queue_depth=depth)
+    base_report = Replayer(base, trace,
+                           retry=RetryPolicy(backoff_s=0.0)).run()
+    tel = Telemetry()
+    ctl = AdmissionController(
+        SLOConfig(ttft_p99_ms=target), mode=args.controller_mode)
+    eng = _smoke_engine(tel, args.seed, args.verify_contracts, args.slots,
+                        args.max_len, False,
+                        chunk_tokens=args.chunk_tokens, controller=ctl,
+                        cost_model=cost, queue_depth=depth)
+    report = Replayer(eng, trace, retry=RetryPolicy(backoff_s=0.0)).run()
+    validate_report(report)
+    base_p99 = base_report["ttft_ms"]["p99"]
+    ctl_p99 = report["ttft_ms"]["p99"]
+    cstats = report["controller"]
+    report["slo"] = {"ttft_p99_ms_target": target,
+                     "baseline_ttft_p99_ms": base_p99,
+                     "guarded_ttft_p99_ms": ctl_p99}
+    print(f"[overload] baseline ttft p99={base_p99:.1f}ms "
+          f"(n={base_report['ttft_ms']['count']}) vs guarded "
+          f"p99={ctl_p99:.1f}ms (n={report['ttft_ms']['count']}), "
+          f"target={target:.1f}ms")
+    print(f"[overload] controller: rung_changes={cstats['rung_changes']} "
+          f"sheds={cstats['sheds']} defers={cstats['defers']} "
+          f"final rung={cstats['rung_name']}")
+    errs = []
+    if base_p99 <= target:
+        errs.append(f"baseline p99 TTFT {base_p99:.1f}ms already meets the "
+                    f"{target:.1f}ms target: the storm is not a storm")
+    if ctl_p99 > target:
+        errs.append(f"guarded p99 TTFT {ctl_p99:.1f}ms misses the "
+                    f"{target:.1f}ms target")
+    if ctl_p99 >= base_p99:
+        errs.append(f"guarded p99 TTFT {ctl_p99:.1f}ms does not beat the "
+                    f"baseline {base_p99:.1f}ms")
+    if cstats["rung_changes"] == 0 or (cstats["sheds"] == 0
+                                       and cstats["defers"] == 0):
+        errs.append(f"vacuous controller run: rung_changes="
+                    f"{cstats['rung_changes']} sheds={cstats['sheds']} "
+                    f"defers={cstats['defers']}")
+    if errs:
+        raise SystemExit("[overload] FAIL:\n  " + "\n  ".join(errs))
+    if args.report_json:
+        with open(args.report_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"[overload] report -> {args.report_json}")
+    if args.perfetto:
+        write_perfetto(args.perfetto, tel)
+        print(f"[overload] perfetto trace -> {args.perfetto}")
+    print("[overload] OK: SLO-guarded replay beats the uncontrolled "
+          "baseline and meets the target")
+    return 0
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -410,7 +510,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--report-json", help="write the replay report here")
     ap.add_argument("--perfetto", help="write a Chrome/Perfetto "
                                        "trace_event JSON here")
+    ap.add_argument("--slo-ttft-p99-ms", type=float, default=None,
+                    help="overload A/B mode: replay a seeded burst trace "
+                         "uncontrolled vs SLO-guarded and hold the "
+                         "guarded run to this p99 TTFT target")
+    ap.add_argument("--chunk-tokens", type=int, default=8,
+                    help="prefill chunk size for the SLO-guarded run "
+                         "(must divide --max-len)")
+    ap.add_argument("--controller-mode", choices=("admission", "full"),
+                    default="full",
+                    help="degradation ladder for the SLO-guarded run")
     args = ap.parse_args(argv)
+
+    if args.slo_ttft_p99_ms is not None:
+        return _overload_ab(args)
 
     tel = Telemetry()
     eng = _smoke_engine(tel, args.seed, args.verify_contracts,

@@ -415,12 +415,32 @@ class Telemetry:
         self._emit("preempt", step, uids=[int(u) for u, _ in victims],
                    slots=[int(s) for _, s in victims], reason=reason)
 
+    def on_chunk(self, uids: Sequence[int], slots: Sequence[int],
+                 start: int, chunk_tokens: int, batch: int,
+                 step: int) -> None:
+        """One chunked-prefill chunk advanced: ``uids``/``slots`` are the
+        group's LIVE rows, ``start`` the chunk's base position."""
+        self._emit("chunk", step, uids=[int(u) for u in uids],
+                   slots=[int(s) for s in slots], start=int(start),
+                   chunk_tokens=int(chunk_tokens), batch=int(batch))
+
+    def on_controller(self, kind: str, step: int, rung: int,
+                      rung_name: str, **details) -> None:
+        """A typed admission-controller decision (rung move, shed,
+        defer) — the replayable record of the degradation ladder."""
+        self._emit("controller", step, decision=kind, rung=int(rung),
+                   rung_name=rung_name, **details)
+
     def on_retire(self, req, state, step: int) -> None:
         r = self.records.get(req.uid)
         slot = req.slot if req.slot is not None and req.slot >= 0 else None
+        # the engine sets diagnostics BEFORE this hook, so shed/deadline/
+        # pressure retirements carry their reason into the event stream
+        reason = (req.diagnostics or {}).get("kind")
+        extra = {"reason": reason} if reason else {}
         self._emit("retire", step, uid=req.uid, state=state.value,
                    tokens_out=len(req.tokens),
-                   slot=slot if slot is not None else -1)
+                   slot=slot if slot is not None else -1, **extra)
         if r is None:
             return
         r["state"] = state.value
@@ -445,7 +465,9 @@ class Telemetry:
 # ----------------------------------------------------------------- perfetto
 
 # Track ids: tid 0 is engine metadata, 1..n_slots the slot tracks,
-# n_slots+1 the queue track.  Span names by event kind/mode.
+# n_slots+1 the queue track, n_slots+2 the admission controller (the
+# controller metadata row appears only when controller events exist, so
+# uncontrolled traces are byte-stable).  Span names by event kind/mode.
 _SPAN_NAMES = {"admit": "prefill", "resume": "resume",
                "decode": "decode", "spec": "spec"}
 
@@ -462,6 +484,7 @@ def perfetto_trace(tel: Telemetry) -> Dict[str, Any]:
     track); "C" counter events for every sampled timeline."""
     pid = 1
     qtid = tel.n_slots + 1
+    ctid = tel.n_slots + 2
     evs: List[Dict[str, Any]] = [
         {"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
          "args": {"name": "repro.serve"}},
@@ -471,6 +494,9 @@ def perfetto_trace(tel: Telemetry) -> Dict[str, Any]:
     for s in range(tel.n_slots):
         evs.append({"ph": "M", "pid": pid, "tid": s + 1,
                     "name": "thread_name", "args": {"name": f"slot {s}"}})
+    if any(ev["kind"] == "controller" for ev in tel.events):
+        evs.append({"ph": "M", "pid": pid, "tid": ctid,
+                    "name": "thread_name", "args": {"name": "controller"}})
 
     def us(t: float) -> float:
         return round(t * 1e6, 3)
@@ -509,10 +535,26 @@ def perfetto_trace(tel: Telemetry) -> Dict[str, Any]:
             evs.append({"ph": "i", "pid": pid, "tid": qtid,
                         "name": "submit", "cat": "serve", "s": "t",
                         "ts": us(t), "args": {"uid": ev["uid"]}})
+        elif kind == "chunk":
+            for uid, slot in zip(ev["uids"], ev["slots"]):
+                evs.append({"ph": "X", "pid": pid, "tid": slot + 1,
+                            "name": "chunk", "cat": "serve",
+                            "ts": us(t), "dur": 0.0,
+                            "args": {"uid": uid, "step": step,
+                                     "start": ev["start"],
+                                     "chunk_tokens": ev["chunk_tokens"]}})
+        elif kind == "controller":
+            evs.append({"ph": "i", "pid": pid, "tid": ctid,
+                        "name": f"ctl:{ev['decision']}:{ev['rung_name']}",
+                        "cat": "serve", "s": "t", "ts": us(t),
+                        "args": {k: v for k, v in ev.items()
+                                 if k not in ("t", "kind")}})
         elif kind == "retire":
             tid = ev["slot"] + 1 if ev["slot"] >= 0 else qtid
+            name = (f"retire:{ev['state']}:{ev['reason']}"
+                    if ev.get("reason") else f"retire:{ev['state']}")
             evs.append({"ph": "i", "pid": pid, "tid": tid,
-                        "name": f"retire:{ev['state']}", "cat": "serve",
+                        "name": name, "cat": "serve",
                         "s": "t", "ts": us(t),
                         "args": {"uid": ev["uid"],
                                  "tokens_out": ev["tokens_out"]}})

@@ -1,0 +1,327 @@
+"""Overload control plane (serve/admission.py).
+
+Pure-host units for the cost model, SLO validation, ladder gating,
+hysteresis and shedding — then a seeded overload storm on a speculative
+engine pinning the full 5-rung decision sequence byte-identical across
+runs under the virtual StepClock.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.serve import (AdmissionController, AdmissionQueue, SLOConfig,
+                         StepCostModel)
+from repro.serve.admission import (RUNG_KV_INT8, RUNG_NOMINAL, RUNG_SHED,
+                                   RUNG_SPEC_HALF, RUNG_SPEC_OFF)
+
+# ---------------------------------------------------------------- cost model
+
+
+def test_cost_model_prices_actual_work():
+    m = StepCostModel()
+    assert m.cost_ms() == 1.0                      # idle step: base only
+    assert m.cost_ms(prefill_tokens=100) == pytest.approx(6.0)
+    assert m.cost_ms(decode_calls=1, draft_calls=3,
+                     verify_tokens=3) == pytest.approx(1 + 4 + 3 + 3)
+    # chunking the same tokens costs the same total — the model must not
+    # bias the controller toward or away from chunked prefill
+    whole = m.cost_ms(prefill_tokens=512)
+    parts = sum(m.cost_ms(prefill_tokens=64) - m.base_ms
+                for _ in range(8)) + m.base_ms
+    assert whole == pytest.approx(parts)
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError):
+        SLOConfig(ttft_p99_ms=0)
+    with pytest.raises(ValueError):
+        SLOConfig(ttft_p99_ms=100, queue_wait_frac=0.0)
+    with pytest.raises(ValueError):
+        SLOConfig(ttft_p99_ms=100, prefill_budget_tokens=0)
+    with pytest.raises(ValueError):
+        SLOConfig(ttft_p99_ms=100, up_patience=0)
+    with pytest.raises(ValueError):
+        AdmissionController(SLOConfig(ttft_p99_ms=100), mode="degrade")
+
+
+# -------------------------------------------------------------- queue units
+
+
+class _Req:
+    def __init__(self, uid, priority=0, tokens=()):
+        self.uid = uid
+        self.priority = priority
+        self.tokens = list(tokens)
+        self.deadline = None
+
+
+def test_pop_worst_is_reverse_rank_and_spares_preempted():
+    q = AdmissionQueue(8)
+    fresh_lo = _Req(1, priority=-1)
+    fresh_hi = _Req(2, priority=1)
+    preempted = _Req(3, priority=-1, tokens=[7])   # has emitted tokens
+    q.push(fresh_hi)
+    q.push(fresh_lo)
+    q.push_front(preempted)
+    # worst admissible FRESH request sheds first: lowest priority, latest
+    assert q.pop_worst(lambda r: not r.tokens) is fresh_lo
+    assert q.pop_worst(lambda r: not r.tokens) is fresh_hi
+    # only the preempted request remains and the fresh filter spares it
+    assert q.pop_worst(lambda r: not r.tokens) is None
+    assert len(q) == 1 and q.pop_worst() is preempted
+
+
+def test_queue_peak_depth_reset():
+    q = AdmissionQueue(8)
+    for i in range(5):
+        q.push(_Req(i))
+    for _ in range(4):
+        q.pop_worst()
+    assert q.peak_depth == 5 and len(q) == 1
+    q.reset_peaks()                 # A/B replays must not inherit peaks
+    assert q.peak_depth == 1
+
+
+# ------------------------------------------------- hysteresis (fake engine)
+
+
+class _FakeEngine:
+    """The exact attribute surface ``on_step``/``allow_fresh`` touch —
+    no jax, so the hysteresis timing is tested in isolation."""
+
+    spec = None
+    kv_dtype = None
+    telemetry = None
+    n_slots = 2
+    last_step_cost_ms = None
+    pending_prefills = 0
+    prefill_backlog_tokens = 0
+
+    def __init__(self):
+        self.queue = AdmissionQueue(64)
+        self.engine_steps = 0
+        self.active = {}
+        self._kv_int8_admission = False
+        self.t = 0.0
+        self.retired = []
+
+    def _clock(self):
+        return self.t
+
+    def _retire(self, req, state, diagnostics=None):
+        self.queue._items = [(o, r) for o, r in self.queue._items
+                             if r is not req]
+        self.retired.append((req.uid, state, diagnostics))
+
+
+def _stale_fresh(uid):
+    r = _Req(uid)
+    r.submitted_at = -100.0          # has waited forever: breach signal
+    return r
+
+
+def test_hysteresis_patience_and_dwell():
+    slo = SLOConfig(ttft_p99_ms=100, up_patience=2, down_patience=3,
+                    min_dwell_steps=3)
+    ctl = AdmissionController(slo, mode="full")
+    eng = _FakeEngine()
+    ctl.attach(eng)
+    assert ctl.ladder == [RUNG_NOMINAL, RUNG_KV_INT8, RUNG_SHED]
+
+    eng.queue.push(_stale_fresh(1))  # permanently breached signal
+    rungs = []
+    for step in range(1, 9):
+        eng.engine_steps = step
+        ctl.on_step(eng)
+        rungs.append(ctl.rung)
+    # up_patience=2 gates the first move; each later move waits out the
+    # 3-step dwell: up at step 2 (hot==2), then step 5, then pinned at top
+    assert rungs == [0, 1, 1, 1, 2, 2, 2, 2]
+    assert eng._kv_int8_admission    # rung 1+ projects onto the engine
+
+    # kv_int8 is CUMULATIVE under shed, and on_step at the top rung shed
+    # the stale fresh request down to the n_slots target depth
+    assert ctl.rung_name == RUNG_SHED
+    assert len(eng.queue) <= eng.n_slots
+
+    eng.queue._items = []            # pressure clears
+    for step in range(9, 20):
+        eng.engine_steps = step
+        ctl.on_step(eng)
+        rungs.append(ctl.rung)
+    # down_patience=3 clear steps -> first step-down at 11, dwell to 14
+    assert rungs[8:] == [2, 2, 1, 1, 1, 0, 0, 0, 0, 0, 0]
+    assert not eng._kv_int8_admission
+    # every change is a typed, replayable decision
+    kinds = [d.kind for d in ctl.decisions if d.kind.startswith("rung")]
+    assert kinds == ["rung_up", "rung_up", "rung_down", "rung_down"]
+    assert ctl.rung_changes == 4
+
+
+def test_shed_abandons_worst_first_to_target_depth():
+    slo = SLOConfig(ttft_p99_ms=100, up_patience=1, min_dwell_steps=0,
+                    shed_target_depth=1)
+    ctl = AdmissionController(slo, mode="admission")
+    eng = _FakeEngine()
+    ctl.attach(eng)
+    assert ctl.ladder == [RUNG_NOMINAL, RUNG_SHED]
+
+    preempted = _Req(9, tokens=[3])
+    preempted.submitted_at = 0.0
+    eng.queue.push_front(preempted)
+    for uid, prio in ((1, 0), (2, -1), (3, 1)):
+        r = _stale_fresh(uid)
+        r.priority = prio
+        eng.queue.push(r)
+    eng.engine_steps = 1
+    ctl.on_step(eng)                 # breach -> shed rung -> shed to depth 1
+    assert ctl.rung_name == RUNG_SHED
+    shed_uids = [u for u, _, _ in eng.retired]
+    assert shed_uids == [2, 1, 3]    # worst-ranked fresh first
+    assert all(d["kind"] == "shed" for _, _, d in eng.retired)
+    # the preempted request is NEVER shed: its slot debt is already paid
+    assert len(eng.queue) == 1 and eng.queue.requests()[0] is preempted
+    assert ctl.sheds == 3
+
+
+def test_idle_engine_always_admits():
+    """Deferring fresh work on an idle engine would livelock: the
+    deferred requests' own queue wait IS the breach signal."""
+    ctl = AdmissionController(SLOConfig(ttft_p99_ms=100), mode="admission")
+    eng = _FakeEngine()
+    ctl.attach(eng)
+    ctl.rung = len(ctl.ladder) - 1
+    ctl._breached = True
+    assert ctl.allow_fresh(eng)      # nothing running -> admit anyway
+    eng.active = {1: object()}
+    assert not ctl.allow_fresh(eng)  # live work to protect -> defer
+
+
+def test_prefill_budget_halves_per_rung():
+    slo = SLOConfig(ttft_p99_ms=100, prefill_budget_tokens=512,
+                    min_prefill_tokens=32)
+    ctl = AdmissionController(slo, mode="full")
+    eng = _FakeEngine()
+    ctl.attach(eng)
+    budgets = []
+    for rung in range(len(ctl.ladder)):
+        ctl.rung = rung
+        budgets.append(ctl.prefill_budget())
+    assert budgets == [512, 256, 128]
+    ctl.rung = 0
+    object.__setattr__(ctl, "rung", 5)   # hypothetical deeper rung
+    assert ctl.prefill_budget() == 32    # floored, never zero
+
+
+def test_one_controller_per_engine():
+    ctl = AdmissionController(SLOConfig(ttft_p99_ms=100))
+    ctl.attach(_FakeEngine())
+    with pytest.raises(ValueError, match="already attached"):
+        ctl.attach(_FakeEngine())
+
+
+# --------------------------------------------- capability-gated ladders
+
+
+@pytest.fixture(scope="module")
+def fp_model():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    jax.config.update("jax_platform_name", "cpu")
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(fp_model, **kw):
+    from repro.serve import ServingEngine
+    cfg, params = fp_model
+    return ServingEngine(params, cfg, n_slots=3, max_len=64, min_bucket=8,
+                         **kw)
+
+
+def test_ladder_gating_capabilities(fp_model):
+    import jax
+    from repro.models import api
+    from repro.serve import SpecConfig
+    cfg, params = fp_model
+    slo = SLOConfig(ttft_p99_ms=250)
+
+    ctl = AdmissionController(slo)
+    _engine(fp_model, controller=ctl)
+    assert ctl.ladder == [RUNG_NOMINAL, RUNG_KV_INT8, RUNG_SHED]
+
+    ctl = AdmissionController(slo, mode="admission")
+    _engine(fp_model, controller=ctl)
+    assert ctl.ladder == [RUNG_NOMINAL, RUNG_SHED]
+
+    draft = api.init_params(jax.random.PRNGKey(99), cfg)
+    ctl = AdmissionController(slo)
+    eng = _engine(fp_model, controller=ctl, draft_params=draft,
+                  spec=SpecConfig(gamma=4))
+    assert ctl.ladder == [RUNG_NOMINAL, RUNG_SPEC_HALF, RUNG_SPEC_OFF,
+                         RUNG_KV_INT8, RUNG_SHED]
+    # spec_half's shrunk window mints exactly one extra verify trace,
+    # and the compile budget accounts for it up front
+    assert 2 in eng.verify_gammas and 4 in eng.verify_gammas
+    from repro.analysis.artifacts import compile_budgets
+    assert compile_budgets(eng)["verify"] == 2
+
+    # int8-resident pages: the kv_int8 rung would be a no-op — gated out
+    ctl = AdmissionController(slo)
+    _engine(fp_model, controller=ctl, kv_layout="paged", page_size=8,
+            kv_dtype="int8")
+    assert ctl.ladder == [RUNG_NOMINAL, RUNG_SHED]
+
+
+# ------------------------------------------------------ seeded storm
+
+
+def test_overload_storm_rung_sequence_deterministic(fp_model):
+    """The full 5-rung ladder under a seeded burst storm on a chunked
+    SPECULATIVE engine: the typed decision stream — every rung change,
+    shed and defer, with virtual timestamps — is byte-identical across
+    two independent runs, and the ladder actually climbs to shed."""
+    import jax
+    from repro.models import api
+    from repro.serve import (Replayer, RetryPolicy, ServingEngine,
+                             SpecConfig, StepClock)
+    from repro.serve.replay import overload_trace
+
+    cfg, params = fp_model
+    draft = api.init_params(jax.random.PRNGKey(99), cfg)
+    trace = overload_trace(seed=5, steps=40, vocab=cfg.vocab)
+
+    def run():
+        ctl = AdmissionController(
+            SLOConfig(ttft_p99_ms=120.0), mode="full")
+        eng = ServingEngine(
+            params, cfg, n_slots=3, max_len=64, min_bucket=8,
+            draft_params=draft, spec=SpecConfig(gamma=2),
+            chunked_prefill=8, controller=ctl,
+            cost_model=StepCostModel(), clock=StepClock(10.0),
+            queue_depth=48)
+        Replayer(eng, trace, retry=RetryPolicy(backoff_s=0.0)).run()
+        return eng, ctl
+
+    eng1, ctl1 = run()
+    eng2, ctl2 = run()
+    assert ctl1.ladder == [RUNG_NOMINAL, RUNG_SPEC_HALF, RUNG_SPEC_OFF,
+                          RUNG_KV_INT8, RUNG_SHED]
+    log1, log2 = ctl1.decision_log(), ctl2.decision_log()
+    assert json.dumps(log1, sort_keys=True) == \
+        json.dumps(log2, sort_keys=True)
+    # non-vacuous: the storm walked the ladder one rung at a time all
+    # the way to shed (so every intermediate rung was exercised)
+    up_rungs = [d["rung_name"] for d in log1 if d["kind"] == "rung_up"]
+    assert RUNG_SHED in up_rungs
+    assert up_rungs[:4] == [RUNG_SPEC_HALF, RUNG_SPEC_OFF, RUNG_KV_INT8,
+                            RUNG_SHED]
+    assert ctl1.sheds > 0
+    # satellite: explicit peak reset between back-to-back A/B replays
+    assert eng1.stats()["queue_peak_depth"] > 0
+    eng1.reset_peaks()
+    assert eng1.stats()["queue_peak_depth"] == len(eng1.queue) == 0

@@ -1,0 +1,240 @@
+"""Chunked prefill (serve/chunked_prefill.py).
+
+The load-bearing claim is BITWISE token parity: splitting a prompt's
+prefill into fixed-budget chunks interleaved with decode must emit
+exactly the tokens monolithic prefill emits — across dense and MLA,
+under preempt/resume mid-``PREFILLING``, over the paged KV layout, and
+inside speculative windows — while chunk jits stay within the TRC-CC1
+compile budget.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import api
+from repro.serve import (AdmissionController, ChunkedPrefillConfig,
+                         RequestState, ServingEngine, SLOConfig, SpecConfig,
+                         StepClock, StepCostModel)
+
+jax.config.update("jax_platform_name", "cpu")
+
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10],
+           [11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21]]
+
+
+@pytest.fixture(scope="module")
+def fp_model():
+    cfg = dataclasses.replace(get_smoke_config("llama1_7b"), vocab=128,
+                              n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(eng, prompts, max_new, eos_id=None):
+    uids = eng.add_requests(prompts, max_new_tokens=max_new, eos_id=eos_id)
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    return [fin[u].tokens for u in uids]
+
+
+# ------------------------------------------------------------------- gates
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ChunkedPrefillConfig(chunk_tokens=0)
+    with pytest.raises(ValueError):
+        ChunkedPrefillConfig(chunk_tokens=8, budget_tokens=0)
+
+
+def test_chunk_must_divide_max_len(fp_model):
+    """A final chunk hanging past the cache end would make
+    dynamic_update_slice clamp its start and silently shift real rows."""
+    cfg, params = fp_model
+    with pytest.raises(ValueError, match="divide"):
+        ServingEngine(params, cfg, n_slots=2, max_len=48,
+                      chunked_prefill=10)
+
+
+def test_windowed_attention_rejected(fp_model):
+    """Ring caches have no linear chunk positions — the gate must be
+    hard, not a silent fallback to monolithic prefill."""
+    cfg, params = fp_model
+    wcfg = dataclasses.replace(cfg, attn_window=16)
+    wparams = api.init_params(jax.random.PRNGKey(0), wcfg)
+    with pytest.raises(NotImplementedError, match="chunked prefill"):
+        ServingEngine(wparams, wcfg, n_slots=2, max_len=64,
+                      chunked_prefill=8)
+
+
+# ------------------------------------------------------------------ parity
+
+def test_chunked_matches_monolithic_dense(fp_model):
+    """Multi-length batched admission: chunk-by-chunk cache append +
+    final masked insert emits tokens bit-identical to one monolithic
+    prefill, within the chunk compile budget."""
+    from repro.analysis import REGISTRY, run_rules
+    from repro.analysis.artifacts import compile_budgets, trace_counts
+
+    cfg, params = fp_model
+    eng_m = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_m = _serve(eng_m, PROMPTS, max_new=6)
+
+    eng_c = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          chunked_prefill=8)
+    toks_c = _serve(eng_c, PROMPTS, max_new=6)
+
+    assert toks_c == toks_m
+    st = eng_c.stats()["chunked"]
+    assert st["chunks_processed"] > 0 and st["prefilling"] == 0
+    # chunk jits recompile per batch bucket only — same TRC-CC1 gate the
+    # prefill/decode paths already live under
+    rep = run_rules([REGISTRY["TRC-CC1"], REGISTRY["TRC-SG1"]],
+                    {"sentinel": eng_c.sentinel,
+                     "compile_budget": compile_budgets(eng_c),
+                     "trace_counts": trace_counts(eng_c)})
+    assert rep.rules_run == ["TRC-CC1", "TRC-SG1"] and not rep.findings, \
+        rep.render()
+
+
+def test_chunked_budget_pacing_parity(fp_model):
+    """A per-step token budget spreads one group's chunks across steps
+    (decode interleaves between them) without changing a single token;
+    a budget smaller than one chunk still guarantees progress."""
+    cfg, params = fp_model
+    eng_m = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_m = _serve(eng_m, PROMPTS, max_new=6)
+
+    eng_c = ServingEngine(
+        params, cfg, n_slots=4, max_len=64, min_bucket=8,
+        chunked_prefill=ChunkedPrefillConfig(chunk_tokens=8,
+                                             budget_tokens=8))
+    toks_c = _serve(eng_c, PROMPTS, max_new=6)
+    assert toks_c == toks_m
+    assert eng_c.stats()["chunked"]["chunks_processed"] > 0
+
+
+def test_chunked_matches_monolithic_mla(fp_model):
+    """MLA prefill chunks through the latent c_kv/k_pe leaves — same
+    uniform-fill branch, different cache pytree."""
+    cfg, _ = fp_model
+    mcfg = dataclasses.replace(cfg, use_mla=True, q_lora=32, kv_lora=16,
+                               rope_head_dim=8, v_head_dim=16, head_dim=16)
+    params = api.init_params(jax.random.PRNGKey(3), mcfg)
+    eng_m = ServingEngine(params, mcfg, n_slots=3, max_len=64, min_bucket=8)
+    toks_m = _serve(eng_m, PROMPTS[:3], max_new=6)
+    eng_c = ServingEngine(params, mcfg, n_slots=3, max_len=64, min_bucket=8,
+                          chunked_prefill=8)
+    toks_c = _serve(eng_c, PROMPTS[:3], max_new=6)
+    assert toks_c == toks_m
+
+
+def test_chunked_paged_parity(fp_model):
+    """Chunked groups prefill into a contiguous fragment and page in only
+    at completion — pages are reserved up front (all-or-nothing), the
+    table row is registered at insert."""
+    cfg, params = fp_model
+    paged = dict(kv_layout="paged", page_size=8)
+    eng_m = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          **paged)
+    toks_m = _serve(eng_m, PROMPTS, max_new=6)
+    eng_c = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          chunked_prefill=8, **paged)
+    toks_c = _serve(eng_c, PROMPTS, max_new=6)
+    assert toks_c == toks_m
+    st = eng_c.stats()
+    # no reservation leak: residual occupancy (prefix-registry retained
+    # pages) matches the monolithic engine's exactly
+    assert st["paged"]["pages_in_use"] == eng_m.stats()["paged"]["pages_in_use"]
+    assert st["chunked"]["chunks_processed"] > 0
+
+
+def test_chunked_inside_speculative_window(fp_model):
+    """Greedy speculation is lossless, so a chunked speculative engine
+    must still match plain monolithic decode token for token — chunked
+    admission happens while other slots sit mid-speculation-window."""
+    cfg, params = fp_model
+    draft = api.init_params(jax.random.PRNGKey(99), cfg)
+    eng_v = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8)
+    toks_v = _serve(eng_v, PROMPTS, max_new=8)
+    eng_s = ServingEngine(params, cfg, n_slots=4, max_len=64, min_bucket=8,
+                          draft_params=draft, spec=SpecConfig(gamma=2),
+                          chunked_prefill=8)
+    toks_s = _serve(eng_s, PROMPTS, max_new=8)
+    assert toks_s == toks_v
+    assert eng_s.stats()["chunked"]["chunks_processed"] > 0
+    # the draft cache is chunk-filled in lockstep with the target's
+    assert eng_s.stats()["chunked"]["draft_chunk_prefill_traces"] >= 1
+
+
+# -------------------------------------------------- PREFILLING lifecycle
+
+def test_preempt_resume_mid_prefilling(fp_model):
+    """Preempting a request mid-``PREFILLING`` drops fragment progress
+    (the batched row was never written), releases its reservation, and
+    re-queues it at the front; the re-run prefill emits bitwise the
+    monolithic tokens.  Surviving group members are unaffected."""
+    cfg, params = fp_model
+    long_a = list(range(1, 25))
+    long_b = list(range(30, 52))
+    eng_m = ServingEngine(params, cfg, n_slots=2, max_len=64, min_bucket=8)
+    toks_m = _serve(eng_m, [long_a, long_b], max_new=6)
+
+    eng = ServingEngine(
+        params, cfg, n_slots=2, max_len=64, min_bucket=8,
+        chunked_prefill=ChunkedPrefillConfig(chunk_tokens=8,
+                                             budget_tokens=8))
+    uids = eng.add_requests([long_a, long_b], max_new_tokens=6)
+    eng.step()                                  # one 8-token chunk only
+    assert eng.pending_prefills == 2
+    g = eng._prefill_groups[0]
+    victim = next(r for r in g.live() if r.uid == uids[0])
+    assert victim.state is RequestState.PREFILLING
+    assert 0 < g.progress < g.target_len
+    # same two moves pump()'s pressure sweep makes
+    g.cancel(victim.uid)
+    eng._preempt_prefilling(victim, "test-pressure")
+    assert victim.state is RequestState.QUEUED
+    assert victim.slot == -1 and len(eng.queue) == 1
+
+    eng.run_to_completion()
+    fin = eng.take_finished()
+    assert [fin[u].tokens for u in uids] == toks_m
+    assert eng.stats()["preemptions"] >= 1
+    assert sorted(eng.free) == [0, 1]
+
+
+def test_prefilling_is_first_class_state(fp_model):
+    """Budgeted chunking leaves requests visibly ``PREFILLING`` across
+    steps (not hidden inside one admission call), and stats/telemetry
+    see the partial state."""
+    cfg, params = fp_model
+    eng = ServingEngine(
+        params, cfg, n_slots=2, max_len=64, min_bucket=8,
+        chunked_prefill=ChunkedPrefillConfig(chunk_tokens=8,
+                                             budget_tokens=8))
+    uid = eng.add_request(list(range(1, 30)), max_new_tokens=4)
+    eng.step()
+    st = eng.stats()["chunked"]
+    assert st["prefilling"] == 1 and st["groups_pending"] == 1
+    assert eng.prefill_backlog_tokens > 0
+    eng.run_to_completion()
+    assert len(eng.take_finished()[uid].tokens) == 4
+    assert eng.stats()["chunked"]["prefilling"] == 0
+
+
+# -------------------------------------------------------------- contracts
+
+def test_verify_contracts_green_with_chunking_and_controller(fp_model):
+    """The PR 8 contract gate stays green with chunked prefill AND the
+    overload controller live on the engine."""
+    cfg, params = fp_model
+    ctl = AdmissionController(SLOConfig(ttft_p99_ms=250.0))
+    eng = ServingEngine(params, cfg, n_slots=3, max_len=64, min_bucket=8,
+                        chunked_prefill=8, controller=ctl,
+                        cost_model=StepCostModel(), clock=StepClock(10.0),
+                        verify_contracts=True)
+    toks = _serve(eng, PROMPTS[:3], max_new=5)
+    assert all(len(t) == 5 for t in toks)
+    assert eng.last_step_cost_ms is not None
