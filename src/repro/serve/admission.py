@@ -280,14 +280,16 @@ class AdmissionController:
 
     def _shed(self, eng, step: int) -> None:
         """Top rung: ABANDON queued fresh work beyond the target depth,
-        worst-ranked first (``pop_worst`` — preempted work carries
-        negative order and is never shed: it holds emitted tokens and
-        its slot debt is already paid)."""
+        worst-ranked first (``pop_worst``).  Previously-preempted work is
+        never shed — not by emitted tokens alone (a mid-``PREFILLING``
+        preempt holds none) but by its preemption count: its slot debt is
+        already paid."""
         target = (self.slo.shed_target_depth
                   if self.slo.shed_target_depth is not None
                   else eng.n_slots)
         while len(eng.queue) > target:
-            victim = eng.queue.pop_worst(lambda r: not r.tokens)
+            victim = eng.queue.pop_worst(
+                lambda r: not r.tokens and r.preemptions == 0)
             if victim is None:
                 break
             self.sheds += 1
@@ -316,9 +318,9 @@ class AdmissionController:
 
     def note_defer(self, eng, blocked: int) -> None:
         step = eng.engine_steps
-        self.defers += 1
         if step != self._last_defer_step:   # one event per step, not per pump
             self._last_defer_step = step
+            self.defers += 1                # counter mirrors the event stream
             self._decide(eng, "defer", step, blocked=blocked,
                          backlog=eng.prefill_backlog_tokens)
 

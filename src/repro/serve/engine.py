@@ -1129,7 +1129,12 @@ class ServingEngine:
                     pages, row, _ = plans[req.uid]
                     self._tables[slots[r]] = row
                     self._req_pages[req.uid] = list(pages)
-                    if self.prefix_registry is not None:
+                    # fake-quantized prefixes must never be shared with
+                    # nominal admissions (on an int8 pool every insert is
+                    # quantized identically, so sharing stays sound there)
+                    if (self.prefix_registry is not None
+                            and not (req.kv_int8
+                                     and self.kv_dtype != "int8")):
                         self.prefix_registry.register(req.prompt, pages)
                     self._note_page_peaks(req)
                 self._tables_dirty = True
@@ -1327,8 +1332,12 @@ class ServingEngine:
                 pages, row, _ = g.plans[req.uid]
                 self._tables[slot] = row
                 # real data only lands in the pages NOW — registering the
-                # prefix any earlier would let a sharer read garbage
-                if self.prefix_registry is not None:
+                # prefix any earlier would let a sharer read garbage; a
+                # fake-quantized prefix is never registered (sharing it
+                # would leak kv_int8 numerics into nominal admissions)
+                if (self.prefix_registry is not None
+                        and not (req.kv_int8
+                                 and self.kv_dtype != "int8")):
                     self.prefix_registry.register(req.prompt, pages)
                 self._note_page_peaks(req)
             self._tables_dirty = True
@@ -1587,8 +1596,11 @@ class ServingEngine:
                 self._note_page_peaks()
                 return page
             except PoolExhausted:
+                # kv_int8 admissions are excluded: preempting one would
+                # force an fp prefix replay at resume, which cannot
+                # reproduce the quantized cache history
                 victims = [r for r in self._victim_order()
-                           if r.uid != req.uid]
+                           if r.uid != req.uid and not r.kv_int8]
                 if (victims and self._preemptible
                         and self.on_pressure == "preempt"):
                     self._preempt(victims[:1], reason="pool_exhausted")
@@ -1722,9 +1734,13 @@ class ServingEngine:
                 # terminal truncation regardless of policy
                 self._retire(req, RequestState.TRUNCATED)
             elif fill >= limit:
-                if self.on_pressure == "preempt" and self._preemptible:
+                if (self.on_pressure == "preempt" and self._preemptible
+                        and not req.kv_int8):
                     victims.append(req)
                 else:
+                    # kv_int8 admissions are non-resumable (an fp prefix
+                    # replay cannot reproduce the quantized cache history),
+                    # so pressure retires them like the truncate policy
                     self._retire(req, RequestState.TRUNCATED, diagnostics={
                         "kind": "cache_pressure", "limit": limit,
                         "engine_step": step_idx})

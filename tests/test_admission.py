@@ -49,11 +49,12 @@ def test_slo_config_validation():
 
 
 class _Req:
-    def __init__(self, uid, priority=0, tokens=()):
+    def __init__(self, uid, priority=0, tokens=(), preemptions=0):
         self.uid = uid
         self.priority = priority
         self.tokens = list(tokens)
         self.deadline = None
+        self.preemptions = preemptions
 
 
 def test_pop_worst_is_reverse_rank_and_spares_preempted():
@@ -167,22 +168,43 @@ def test_shed_abandons_worst_first_to_target_depth():
     ctl.attach(eng)
     assert ctl.ladder == [RUNG_NOMINAL, RUNG_SHED]
 
-    preempted = _Req(9, tokens=[3])
+    preempted = _Req(9, tokens=[3], preemptions=1)
     preempted.submitted_at = 0.0
     eng.queue.push_front(preempted)
+    # a mid-PREFILLING preempt holds NO tokens yet must also be spared:
+    # its admission debt (reserved pages, replayed chunks) is already paid
+    prefilling = _Req(8, tokens=(), preemptions=1)
+    prefilling.submitted_at = 0.0
+    eng.queue.push_front(prefilling)
     for uid, prio in ((1, 0), (2, -1), (3, 1)):
         r = _stale_fresh(uid)
         r.priority = prio
         eng.queue.push(r)
     eng.engine_steps = 1
-    ctl.on_step(eng)                 # breach -> shed rung -> shed to depth 1
+    ctl.on_step(eng)                 # breach -> shed rung -> shed to target
     assert ctl.rung_name == RUNG_SHED
     shed_uids = [u for u, _, _ in eng.retired]
     assert shed_uids == [2, 1, 3]    # worst-ranked fresh first
     assert all(d["kind"] == "shed" for _, _, d in eng.retired)
-    # the preempted request is NEVER shed: its slot debt is already paid
-    assert len(eng.queue) == 1 and eng.queue.requests()[0] is preempted
+    # preempted work is NEVER shed — with or without emitted tokens
+    assert len(eng.queue) == 2
+    assert set(eng.queue.requests()) == {preempted, prefilling}
     assert ctl.sheds == 3
+
+
+def test_defer_counter_matches_decision_stream():
+    """``defers`` dedupes per engine step exactly like the typed decision
+    log, so replay/bench counters stay comparable across the two."""
+    ctl = AdmissionController(SLOConfig(ttft_p99_ms=100), mode="admission")
+    eng = _FakeEngine()
+    ctl.attach(eng)
+    eng.engine_steps = 1
+    ctl.note_defer(eng, blocked=2)   # explicit pump() ...
+    ctl.note_defer(eng, blocked=2)   # ... then step()'s own pump
+    eng.engine_steps = 2
+    ctl.note_defer(eng, blocked=1)
+    defer_events = [d for d in ctl.decisions if d.kind == "defer"]
+    assert ctl.defers == len(defer_events) == 2
 
 
 def test_idle_engine_always_admits():

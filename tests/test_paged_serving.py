@@ -20,7 +20,8 @@ from repro.configs import get_smoke_config
 from repro.models import api
 from repro.models.layers import (init_paged_kv_cache, paged_write_ids,
                                  pool_view, pool_write)
-from repro.serve import PoolExhausted, ServingEngine, SpecConfig
+from repro.serve import (PoolExhausted, RequestState, ServingEngine,
+                         SpecConfig)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -168,6 +169,26 @@ def test_int8_serving_completes_with_bounded_drift(fp_model):
     assert eng._preemptible is False
 
 
+def test_kv_int8_rung_pressure_truncates_not_preempts(fp_model):
+    """A kv_int8 admission on an fp pool is never preempted for cache
+    pressure: resume replays the prefix in fp numerics, which cannot
+    reproduce the int8-quantized cache history.  Pressure retires it as
+    a typed truncation instead (the same contract as priority preempts
+    and PREFILLING cancels, which already exclude kv_int8 victims)."""
+    eng = _engine(fp_model, **PAGED)
+    eng._kv_int8_admission = True        # what the controller rung projects
+    uids = eng.add_requests(PROMPTS[:2], max_new_tokens=10)
+    for _ in range(3):
+        eng.step()
+    assert all(eng.active[u].kv_int8 for u in uids)
+    eng.set_cache_pressure(4)            # below both fills
+    eng.step()
+    fin = eng.take_finished()
+    assert all(fin[u].state is RequestState.TRUNCATED for u in uids)
+    assert all(fin[u].diagnostics["kind"] == "cache_pressure" for u in uids)
+    assert eng.preemptions == 0
+
+
 # -------------------------------------------------------------- prefix sharing
 
 def test_prefix_sharing_parity_and_page_savings(fp_model):
@@ -188,6 +209,26 @@ def test_prefix_sharing_parity_and_page_savings(fp_model):
     assert sp["cow_copies"] == 0 and sp["prefix_hits"] == 0
     # the whole point: fewer physical pages for the same served tokens
     assert ss["peak_pages_in_use"] < sp["peak_pages_in_use"]
+
+
+def test_kv_int8_rung_prefixes_never_registered_on_fp_pool(fp_model):
+    """A fake-quantized prefix must not enter the sharing registry: a
+    later NOMINAL request reusing it would silently read int8 K/V and
+    lose bitwise parity with an uncontrolled run."""
+    sys_p = list(range(1, 25))
+    eng = _engine(fp_model, **PAGED)
+    eng._kv_int8_admission = True
+    eng.submit(sys_p + [40], max_new_tokens=4)
+    eng.run_to_completion()
+    eng.take_finished()
+    assert len(eng.prefix_registry) == 0     # quantized prefix not shared
+    # a nominal admission on the same engine stays bit-identical to the
+    # contiguous baseline (nothing to share, so it prefills in full fp)
+    eng._kv_int8_admission = False
+    base = _drain(_engine(fp_model), [sys_p + [41]], max_new=6, batch=False)
+    assert _drain(eng, [sys_p + [41]], max_new=6, batch=False) == base
+    assert eng.stats()["paged"]["prefix_hits"] == 0
+    assert len(eng.prefix_registry) == 1     # nominal prefixes still register
 
 
 # ----------------------------------------------------------- pool backpressure
